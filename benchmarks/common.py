@@ -1,0 +1,130 @@
+"""Shared benchmark machinery: cached pipeline runs + paper-scale workloads
++ host-model calibration.
+
+Every benchmark module draws from the same measured runs (one per
+dataset x mode, cached under results/bench/) so figures are consistent.
+
+Calibration: the paper's own evaluation is simulation-based; its absolute
+RH2 runtimes are derived from Table 4 (exact MARS throughputs) and the
+average speedups of Fig. 11 with a small->large genome profile (documented
+in EXPERIMENTS.md).  Host component rates are least-squares fitted so the
+modeled RH2 matches those totals and the Fig. 5 stage fractions.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.core import MarsConfig, Mapper, build_index, score_accuracy
+from repro.core import ssd_model, workload
+from repro.signal import datasets, simulate
+
+CACHE = pathlib.Path("results/bench")
+
+# --- paper-derived anchors (see EXPERIMENTS.md Calibration) ---------------- #
+# Table 4 MARS throughputs (bp/s) -> exact MARS runtimes:
+PAPER_MARS_T = {k: datasets.DATASETS[k].paper_bases / tp for k, tp in
+                dict(D1=46_655_128, D2=5_274_148, D3=1_202_660,
+                     D4=1_277_764, D5=286_728).items()}
+# Fig. 11 speedup profile over RH2 (avg 28x, larger for small genomes):
+RH2_SPEEDUP = dict(D1=54.2, D2=36.1, D3=22.6, D4=18.1, D5=9.0)
+PAPER_RH2_T = {k: PAPER_MARS_T[k] * s for k, s in RH2_SPEEDUP.items()}
+# Fig. 5 stage fractions of RH2 runtime (io, event, seed, chain):
+FIG5_FRACTIONS = {
+    "D1": (0.41, 0.205, 0.06, 0.331),
+    "D2": (0.30, 0.15, 0.07, 0.48),
+    "D3": (0.25, 0.10, 0.06, 0.59),
+    "D4": (0.10, 0.05, 0.05, 0.80),
+    "D5": (0.02, 0.01, 0.043, 0.927),
+}
+
+
+def pipeline_run(ds_key: str, mode: str, force: bool = False) -> Dict:
+    """Run (or load cached) one dataset x mode mapping; returns counters,
+    accuracy, wall time and raw sizes."""
+    CACHE.mkdir(parents=True, exist_ok=True)
+    f = CACHE / f"{ds_key}_{mode}.json"
+    if f.exists() and not force:
+        return json.loads(f.read_text())
+    spec = datasets.DATASETS[ds_key]
+    cfg = datasets.config_for(spec).with_mode(mode)
+    ref, reads = datasets.build(spec, cfg)
+    index = build_index(ref.events_concat, ref.n_events, cfg)
+    mapper = Mapper(index, cfg)
+    t0 = time.time()
+    out = mapper.map_signals(reads.signals, chunk=32)
+    wall = time.time() - t0
+    acc = score_accuracy(out, reads.true_pos, reads.true_strand,
+                         reads.mappable, reads.n_bases, ref.n_events)
+    rec = dict(
+        dataset=ds_key, mode=mode,
+        counters={k: int(v) for k, v in out.counters.items()},
+        accuracy={k: float(v) for k, v in acc.items()},
+        wall_time=wall,
+        index_bytes=int(index.nbytes),
+        bench_bytes_raw=int(out.counters["n_samples"]) * 2,
+        n_reads=int(spec.bench_reads),
+    )
+    f.write_text(json.dumps(rec))
+    return rec
+
+
+def workload_for(ds_key: str, mode: str) -> workload.Workload:
+    """Paper-scale workload for the analytic hardware model.
+
+    Two extrapolation factors: signal volume (paper_bytes/bench_bytes)
+    scales everything linearly; genome size additionally inflates
+    collision-driven counts (seed hits / anchors / DP pairs): spurious
+    candidate positions grow linearly with reference length, and the
+    paper's frequency thresholds scale UP with genome size (2000 -> 20000,
+    Section 5.1) so the filter does not cancel the growth — exponent 1.0
+    (see EXPERIMENTS.md Calibration)."""
+    rec = pipeline_run(ds_key, mode)
+    spec = datasets.DATASETS[ds_key]
+    cfg = datasets.config_for(spec).with_mode(mode)
+    w = workload.from_counters(rec["counters"], cfg, rec["index_bytes"])
+    factor = spec.bytes_scale_factor(rec["bench_bytes_raw"])
+    w = w.scale(factor)
+    g = spec.genome_scale_factor ** 1.0
+    for f in ("n_hits_raw", "n_hits_exact", "n_hits_postfreq", "n_votes",
+              "n_anchors_postvote", "n_sorted", "n_dp_pairs"):
+        setattr(w, f, int(getattr(w, f) * g))
+    # the index itself scales with genome size, not signal volume
+    w.bytes_index = int(rec["index_bytes"] * spec.genome_scale_factor)
+    return w
+
+
+_CALIB_CACHE = None
+
+
+def calibrated_host() -> ssd_model.HostRates:
+    """Closed-form per-stage calibration: for every dataset the paper gives
+    (total RH2 runtime, stage fraction); each stage's inverse rate is the
+    geometric mean over datasets of  frac * T_total / W_stage.  Per-stage
+    closed form avoids the scale pathologies of a joint least-squares fit
+    (the io byte counts are ~6 orders larger than anchor counts)."""
+    global _CALIB_CACHE
+    if _CALIB_CACHE is not None:
+        return _CALIB_CACHE
+    stage_names = ("io", "event", "seed", "chain")
+    per_stage = {s: [] for s in stage_names}
+    for ds in datasets.DATASETS:
+        w = workload_for(ds, "rh2")
+        comp = ssd_model.host_components(w)
+        total = PAPER_RH2_T[ds]
+        for i, s in enumerate(stage_names):
+            if comp[s] > 0:
+                per_stage[s].append(FIG5_FRACTIONS[ds][i] * total / comp[s])
+    gm = {s: float(np.exp(np.mean(np.log(v)))) for s, v in per_stage.items()}
+    _CALIB_CACHE = ssd_model.HostRates(
+        inv_io=gm["io"], inv_event=gm["event"], inv_seed=gm["seed"],
+        inv_chain=gm["chain"])
+    return _CALIB_CACHE
+
+
+def csv_line(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.3f},{derived}"

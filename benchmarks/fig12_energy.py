@@ -1,0 +1,38 @@
+"""Paper Fig. 12: energy reduction of each system over RH2."""
+from __future__ import annotations
+
+import statistics
+
+from benchmarks import common
+from benchmarks.fig11_speedup import MODE_FOR, results
+from repro.core import ssd_model
+from repro.signal import datasets
+
+PAPER_AVG = {"MARS/RH2": 79.4, "MARS/BC": 427.0, "MARS/GenPIP": 72.0,
+             "MS-EXT/RH2": 22.3}
+
+
+def run(emit) -> None:
+    res = results()
+    acc = {k: [] for k in PAPER_AVG}
+    for ds, row in res.items():
+        rh2 = row["RH2"]["energy"]
+        parts = [f"{s}={rh2/row[s]['energy']:.1f}x"
+                 for s in ssd_model.SYSTEMS if s != "RH2"]
+        emit(common.csv_line(f"fig12/{ds}", row["MARS"]["energy"], ";".join(parts)))
+        acc["MARS/RH2"].append(rh2 / row["MARS"]["energy"])
+        acc["MARS/BC"].append(row["BC"]["energy"] / row["MARS"]["energy"])
+        acc["MARS/GenPIP"].append(row["GenPIP"]["energy"] / row["MARS"]["energy"])
+        acc["MS-EXT/RH2"].append(rh2 / row["MS-EXT"]["energy"])
+    for k, vals in acc.items():
+        emit(common.csv_line(
+            f"fig12/avg/{k}", 0.0,
+            f"ours={statistics.mean(vals):.1f}x;paper={PAPER_AVG[k]:.1f}x"))
+
+
+def main() -> None:
+    run(print)
+
+
+if __name__ == "__main__":
+    main()

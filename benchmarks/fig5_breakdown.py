@@ -1,0 +1,31 @@
+"""Paper Fig. 5: RawHash2 runtime breakdown (I/O, event detection, seeding,
+chaining) per dataset, from the calibrated host model over measured
+workloads."""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core import ssd_model
+from repro.signal import datasets
+
+
+def run(emit) -> None:
+    rates = common.calibrated_host()
+    for ds in datasets.DATASETS:
+        w = common.workload_for(ds, "rh2")
+        t = ssd_model.host_latency(w, rates)
+        tot = t["total"]
+        paper = common.FIG5_FRACTIONS[ds]
+        emit(common.csv_line(
+            f"fig5/{ds}", tot * 1e6,
+            f"io={t['io']/tot:.2f};event={t['event']/tot:.2f};"
+            f"seed={t['seed']/tot:.2f};chain={t['chain']/tot:.2f};"
+            f"paper=io{paper[0]:.2f}/ev{paper[1]:.2f}/"
+            f"se{paper[2]:.2f}/ch{paper[3]:.2f}"))
+
+
+def main() -> None:
+    run(print)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  The first invocation runs
+the full pipeline per (dataset x mode) and caches results under
+results/bench/; later invocations are fast.
+
+    PYTHONPATH=src python -m benchmarks.run            # all tables
+    PYTHONPATH=src python -m benchmarks.run fig11      # one table
+"""
+import sys
+
+from benchmarks import (fig5_breakdown, fig6_io_impact, fig11_speedup,
+                        fig12_energy, fig13_dram_sensitivity,
+                        table3_accuracy, table4_throughput, table5_area)
+
+MODULES = {
+    "table3": table3_accuracy,
+    "fig5": fig5_breakdown,
+    "fig6": fig6_io_impact,
+    "fig11": fig11_speedup,
+    "fig12": fig12_energy,
+    "table4": table4_throughput,
+    "table5": table5_area,
+    "fig13": fig13_dram_sensitivity,
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(MODULES)
+    print("name,us_per_call,derived")
+    for key in which:
+        MODULES[key].run(print)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Train a reduced-config LM for a few hundred steps on the synthetic token
+stream, with checkpointing — exercises the full training substrate
+(optimizer, sharding, monitor, checkpoint/resume).
+
+    PYTHONPATH=src python examples/train_lm.py [--arch qwen3-4b] [--steps 200]
+"""
+import argparse
+import sys
+
+from repro.launch import train
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+    train.main([
+        "--arch", args.arch, "--reduced",
+        "--steps", str(args.steps),
+        "--batch", "8", "--seq", "128",
+        "--ckpt-dir", "/tmp/mars_train_lm",
+        "--save-every", "50", "--log-every", "20",
+    ])

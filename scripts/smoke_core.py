@@ -1,0 +1,23 @@
+"""Dev smoke: end-to-end mapping accuracy on synthetic genomes, all modes."""
+import sys, time
+import numpy as np
+from repro.core import MarsConfig, build_index, Mapper, score_accuracy
+from repro.signal import simulate
+
+ref_len = int(sys.argv[1]) if len(sys.argv) > 1 else 100_000
+n_reads = int(sys.argv[2]) if len(sys.argv) > 2 else 64
+cfg0 = MarsConfig()
+ref = simulate.make_reference(ref_len, seed=0)
+reads = simulate.sample_reads(ref, n_reads, signal_len=cfg0.signal_len,
+                              seed=1, junk_frac=0.1)
+for mode in ("rh2", "ms_float", "ms_fixed"):
+    cfg = cfg0.with_mode(mode)
+    idx = build_index(ref.events_concat, ref.n_events, cfg)
+    mapper = Mapper(idx, cfg)
+    t0 = time.time()
+    out = mapper.map_signals(reads.signals, chunk=64)
+    dt = time.time() - t0
+    acc = score_accuracy(out, reads.true_pos, reads.true_strand,
+                         reads.mappable, reads.n_bases, ref.n_events)
+    print(f"{mode:10s} P={acc['precision']:.3f} R={acc['recall']:.3f} "
+          f"F1={acc['f1']:.3f} tp={acc['tp']} fp={acc['fp']} fn={acc['fn']} t={dt:.1f}s")

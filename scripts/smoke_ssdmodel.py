@@ -1,0 +1,23 @@
+import numpy as np
+from repro.core import MarsConfig, build_index, Mapper
+from repro.core import ssd_model, workload
+from repro.signal import datasets, simulate
+
+spec = datasets.DATASETS["D2"]
+cfg = datasets.config_for(spec).with_mode("ms_fixed")
+ref, reads = datasets.build(spec, cfg)
+idx = build_index(ref.events_concat, ref.n_events, cfg)
+out = Mapper(idx, cfg).map_signals(reads.signals, chunk=64)
+w = workload.from_counters(out.counters, cfg, idx.nbytes)
+# scale to paper dataset magnitude
+w = w.scale(spec.scale_factor)
+res = {}
+for s in ssd_model.SYSTEMS:
+    res[s] = ssd_model.system_latency_energy(s, w)
+rh2 = res["RH2"]
+print(f"{'system':14s} {'total_s':>10s} {'speedup_vs_RH2':>15s} {'energy_red':>11s}")
+for s, r in res.items():
+    print(f"{s:14s} {r['total']:10.2f} {rh2['total']/r['total']:15.1f} {rh2['energy']/r['energy']:11.1f}")
+print("\npaper targets: MARS vs RH2 28x (energy 180x); vs BC 93x (427x); vs GenPIP 40x (72x); vs MS-EXT 3.1x; vs MS-SIMDRAM latency 21.4x faster, energy 3.5x worse")
+m, bc, gp, ext, sd = res["MARS"], res["BC"], res["GenPIP"], res["MS-EXT"], res["MS-SIMDRAM"]
+print(f"ours: MARS vs RH2 {rh2['total']/m['total']:.1f}x ({rh2['energy']/m['energy']:.0f}x) | vs BC {bc['total']/m['total']:.1f}x ({bc['energy']/m['energy']:.0f}x) | vs GenPIP {gp['total']/m['total']:.1f}x ({gp['energy']/m['energy']:.0f}x) | vs EXT {ext['total']/m['total']:.1f}x | vs SIMDRAM {sd['total']/m['total']:.1f}x")

@@ -1,0 +1,19 @@
+import itertools
+import numpy as np
+from repro.core import MarsConfig, build_index, Mapper, score_accuracy
+from repro.signal import simulate
+
+ref = simulate.make_reference(100_000, seed=0)
+for q, w, tau in itertools.product((3, 4), (5, 6, 7), (2.0, 2.5)):
+    cfg = MarsConfig(quant_bits=q, seed_width=w, tstat_threshold=tau,
+                     min_chain_score=4.0, peak_window=3).with_mode("ms_fixed")
+    reads = simulate.sample_reads(ref, 64, signal_len=cfg.signal_len, seed=1,
+                                  junk_frac=0.1)
+    idx = build_index(ref.events_concat, ref.n_events, cfg)
+    out = Mapper(idx, cfg).map_signals(reads.signals, chunk=64)
+    acc = score_accuracy(out, reads.true_pos, reads.true_strand,
+                         reads.mappable, reads.n_bases, ref.n_events)
+    hits = out.counters["n_hits_raw"] / 64
+    hpost = out.counters["n_hits_postfreq"] / 64
+    print(f"q={q} w={w} tau={tau}: P={acc['precision']:.3f} R={acc['recall']:.3f} "
+          f"F1={acc['f1']:.3f} hits/read={hits:.0f} postfreq={hpost:.0f}")

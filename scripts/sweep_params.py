@@ -1,0 +1,20 @@
+"""Dev sweep: event-detection + chaining params vs accuracy."""
+import itertools
+import numpy as np
+from repro.core import MarsConfig, build_index, Mapper, score_accuracy
+from repro.signal import simulate
+
+ref = simulate.make_reference(100_000, seed=0)
+for tau, mcs, pw in itertools.product((2.5, 3.0, 4.0), (4.0, 6.0), (2, 3)):
+    cfg = MarsConfig(tstat_threshold=tau, min_chain_score=mcs,
+                     peak_window=pw).with_mode("ms_fixed")
+    reads = simulate.sample_reads(ref, 64, signal_len=cfg.signal_len, seed=1,
+                                  junk_frac=0.1)
+    idx = build_index(ref.events_concat, ref.n_events, cfg)
+    out = Mapper(idx, cfg).map_signals(reads.signals, chunk=64)
+    acc = score_accuracy(out, reads.true_pos, reads.true_strand,
+                         reads.mappable, reads.n_bases, ref.n_events)
+    ev = out.counters["n_events"] / 64
+    hits = out.counters["n_hits_raw"] / 64
+    print(f"tau={tau} mcs={mcs} pw={pw}: P={acc['precision']:.3f} "
+          f"R={acc['recall']:.3f} F1={acc['f1']:.3f} ev/read={ev:.0f} hits/read={hits:.0f}")

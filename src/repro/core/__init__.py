@@ -1,0 +1,18 @@
+"""MARS core: the paper's contribution as composable JAX modules.
+
+Public API:
+    MarsConfig            static pipeline configuration
+    build_index           offline reference indexing
+    Mapper / map_chunk    online read mapping (jit)
+    score_accuracy        P/R/F1 vs. ground truth
+"""
+from repro.core.config import (DEFAULT, MODE_MS_FIXED, MODE_MS_FLOAT,
+                               MODE_RH2, MODES, MarsConfig)
+from repro.core.index import Index, build_index, index_arrays
+from repro.core.pipeline import MapOutput, Mapper, map_chunk, score_accuracy
+
+__all__ = [
+    "DEFAULT", "MODES", "MODE_RH2", "MODE_MS_FLOAT", "MODE_MS_FIXED",
+    "MarsConfig", "Index", "build_index", "index_arrays",
+    "MapOutput", "Mapper", "map_chunk", "score_accuracy",
+]

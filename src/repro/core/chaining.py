@@ -1,0 +1,134 @@
+"""Chaining (paper Fig. 1, mapping step 3): anchor sort + banded DP.
+
+Anchors are sorted by (t_pos, q_pos) — MARS does this on the in-controller
+bitonic Sorter/Merger; the optimized pipeline path routes the sort through
+the `bitonic_sort` Pallas kernel, the reference path uses jnp.sort.  The DP
+is minimap2-style with a fixed look-back band B (MARS's Arithmetic Units are
+word-serial, so RawHash2's bounded-predecessor heuristic maps directly).
+
+    f[i] = w + max(0, max_{j in band, colinear} f[j] - beta*|dt - dq|
+                                              - alpha*min(dt, dq))
+
+The best chain's projected start (t_start - q_start) is the mapping position.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import MarsConfig
+
+NEG = -1e9
+_INVALID_KEY = jnp.int32(0x7FFFFFFF)
+# packed sort key: [t_pos : 23 bits | q_pos : 8 bits] in a non-negative
+# int32 — requires the double genome to have < 2^23 events and
+# max_events <= 256 (checked at index build time; our scaled datasets are
+# far below).  int32 keys are what the bitonic Pallas kernel sorts.
+_Q_BITS = 8
+
+
+class ChainResult(NamedTuple):
+    t_start: jnp.ndarray     # () int32 — double-genome coords
+    score: jnp.ndarray       # () f32
+    score2: jnp.ndarray      # () f32 second-best (distinct location)
+    mapped: jnp.ndarray      # () bool
+    n_anchors: jnp.ndarray   # () int32 anchors entering the DP
+
+
+def sort_anchors(q_pos: jnp.ndarray, t_pos: jnp.ndarray, valid: jnp.ndarray,
+                 cfg: MarsConfig, sorter=None):
+    """Flatten (E,H) anchors, sort by (t_pos, q_pos) with invalids last, and
+    keep the first `max_anchors`.  `sorter(keys) -> sorted_keys` is injectable
+    (Pallas bitonic kernel); default jnp.sort.
+
+    Packs (t_pos, q_pos) into a uint32 key [t:24 | q:8] so the sort is a
+    single-key sort (what the in-controller bitonic Sorter consumes).
+    """
+    if sorter is None:
+        sorter = jnp.sort
+    t = t_pos.reshape(-1).astype(jnp.int32)
+    q = jnp.minimum(q_pos.reshape(-1), (1 << _Q_BITS) - 1).astype(jnp.int32)
+    v = valid.reshape(-1)
+    key = (t << _Q_BITS) | q
+    key = jnp.where(v, key, _INVALID_KEY)
+    skey = sorter(key)[: cfg.max_anchors]
+    sv = skey != _INVALID_KEY
+    st = (skey >> _Q_BITS).astype(jnp.int32)
+    sq = (skey & ((1 << _Q_BITS) - 1)).astype(jnp.int32)
+    return sq, st, sv
+
+
+def chain_dp(q: jnp.ndarray, t: jnp.ndarray, valid: jnp.ndarray,
+             cfg: MarsConfig):
+    """Banded DP over sorted anchors.
+
+    q, t: (A,) int32 sorted by (t, q); valid: (A,) bool.
+    Returns (f (A,) f32 chain scores, diag0 (A,) int32 start diag of the best
+    chain ending at each anchor).
+    """
+    A, B = q.shape[0], cfg.chain_band
+    # pad the carried state with B sentinel slots in front
+    f0 = jnp.full(A + B, NEG, jnp.float32)
+    d0 = jnp.zeros(A + B, jnp.int32)
+    tp = jnp.concatenate([jnp.full(B, -(1 << 30), jnp.int32), t])
+    qp = jnp.concatenate([jnp.full(B, -(1 << 30), jnp.int32), q])
+
+    def step(carry, i):
+        f, d = carry
+        ti, qi, vi = t[i], q[i], valid[i]
+        fw = jax.lax.dynamic_slice(f, (i,), (B,))
+        dw = jax.lax.dynamic_slice(d, (i,), (B,))
+        tw = jax.lax.dynamic_slice(tp, (i,), (B,))
+        qw = jax.lax.dynamic_slice(qp, (i,), (B,))
+        dt = ti - tw
+        dq = qi - qw
+        ok = (dt > 0) & (dq > 0) & (dt <= cfg.max_gap) & (dq <= cfg.max_gap)
+        gap = jnp.abs(dt - dq).astype(jnp.float32)
+        skip = jnp.minimum(dt, dq).astype(jnp.float32)
+        cand = fw - cfg.gap_cost * gap - cfg.skip_cost * skip
+        cand = jnp.where(ok & (fw > NEG / 2), cand, NEG)
+        bj = jnp.argmax(cand)
+        best = cand[bj]
+        ext = best > 0.0
+        fi = cfg.anchor_score + jnp.maximum(best, 0.0)
+        fi = jnp.where(vi, fi, NEG)
+        di = jnp.where(ext, dw[bj], ti - qi)
+        f = jax.lax.dynamic_update_slice(f, fi[None], (i + B,))
+        d = jax.lax.dynamic_update_slice(d, di[None], (i + B,))
+        return (f, d), None
+
+    (f, d), _ = jax.lax.scan(step, (f0, d0), jnp.arange(A))
+    return f[B:], d[B:]
+
+
+def best_chain(f: jnp.ndarray, diag0: jnp.ndarray, valid: jnp.ndarray,
+               cfg: MarsConfig) -> ChainResult:
+    """Best + second-best (distinct window) chain -> mapping decision."""
+    fv = jnp.where(valid, f, NEG)
+    i1 = jnp.argmax(fv)
+    s1 = fv[i1]
+    d1 = diag0[i1]
+    far = jnp.abs(diag0 - d1) > cfg.voting_window
+    fv2 = jnp.where(valid & far, f, NEG)
+    s2 = jnp.maximum(jnp.max(fv2), 0.0)
+    mapped = (s1 >= cfg.min_chain_score) & (s1 >= cfg.map_ratio * s2)
+    t_start = jnp.maximum(d1, 0).astype(jnp.int32)
+    return ChainResult(t_start=t_start, score=s1, score2=s2, mapped=mapped,
+                       n_anchors=valid.sum().astype(jnp.int32))
+
+
+def chain_anchors(q_pos: jnp.ndarray, t_pos: jnp.ndarray, valid: jnp.ndarray,
+                  cfg: MarsConfig, sorter=None, dp=None) -> (ChainResult, Dict):
+    sq, st, sv = sort_anchors(q_pos, t_pos, valid, cfg, sorter=sorter)
+    if dp is None:
+        f, d0 = chain_dp(sq, st, sv, cfg)
+    else:
+        f, d0 = dp(sq, st, sv)
+    res = best_chain(f, d0, sv, cfg)
+    counters = dict(
+        n_sorted=jnp.minimum(valid.sum(), cfg.max_anchors),
+        n_dp_pairs=sv.sum() * cfg.chain_band,
+    )
+    return res, counters

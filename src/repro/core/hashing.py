@@ -1,0 +1,99 @@
+"""Seed hashing: pack w consecutive quantized event symbols into hash keys.
+
+RawHash2-style: a seed is the concatenation of q-bit symbols from w
+consecutive events, mixed through an avalanche hash so the direct-address
+bucket table (index.py) spreads uniformly.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import MarsConfig
+
+_MIX_C1 = 0x85EBCA6B
+_MIX_C2 = 0xC2B2AE35
+
+
+def mix32(x: jnp.ndarray) -> jnp.ndarray:
+    """murmur3 finalizer on uint32 (wrapping multiply is native)."""
+    c1 = jnp.uint32(_MIX_C1)
+    c2 = jnp.uint32(_MIX_C2)
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * c1
+    x = x ^ (x >> 13)
+    x = x * c2
+    x = x ^ (x >> 16)
+    return x
+
+
+def mix32_np(x: np.ndarray) -> np.ndarray:
+    """numpy twin on uint64 with explicit 32-bit masking."""
+    m = np.uint64(0xFFFFFFFF)
+    x = x.astype(np.uint64) & m
+    x = x ^ (x >> np.uint64(16))
+    x = (x * np.uint64(_MIX_C1)) & m
+    x = x ^ (x >> np.uint64(13))
+    x = (x * np.uint64(_MIX_C2)) & m
+    x = x ^ (x >> np.uint64(16))
+    return x
+
+
+def pack_seeds(symbols: jnp.ndarray, n_events: jnp.ndarray,
+               cfg: MarsConfig):
+    """symbols: (E,) int32 in [0, 2^q).  Returns (keys (E,) uint32,
+    valid (E,) bool) — seed i covers events [i, i+w)."""
+    E = symbols.shape[0]
+    w, q = cfg.seed_width, cfg.quant_bits
+    s = symbols.astype(jnp.uint32)
+    key = jnp.zeros(E, jnp.uint32)
+    for j in range(w):
+        shifted = jnp.roll(s, -j)              # symbols[i+j] at slot i
+        key = (key << q) | shifted
+    key = mix32(key)
+    idx = jnp.arange(E)
+    valid = idx + w <= n_events
+    return key, valid
+
+
+def minimizer_mask(keys: jnp.ndarray, valid: jnp.ndarray,
+                   radius: int) -> jnp.ndarray:
+    """Winnowing subsample: keep seed i iff its key is the minimum within
+    +-radius positions (RawHash2-style minimizer seeding; the same rule on
+    read and reference keeps matches consistent).  radius=0 -> keep all."""
+    if radius <= 0:
+        return valid
+    E = keys.shape[0]
+    big = jnp.uint32(0xFFFFFFFF)
+    kv = jnp.where(valid, keys, big)
+    wmin = kv
+    for d in range(1, radius + 1):
+        left = jnp.concatenate([jnp.full((d,), big, jnp.uint32), kv[:-d]])
+        right = jnp.concatenate([kv[d:], jnp.full((d,), big, jnp.uint32)])
+        wmin = jnp.minimum(wmin, jnp.minimum(left, right))
+    return valid & (kv == wmin)
+
+
+def minimizer_mask_np(keys: np.ndarray, radius: int) -> np.ndarray:
+    if radius <= 0:
+        return np.ones(keys.shape[0], bool)
+    big = np.uint32(0xFFFFFFFF)
+    kv = keys.astype(np.uint32)
+    wmin = kv.copy()
+    for d in range(1, radius + 1):
+        left = np.concatenate([np.full(d, big, np.uint32), kv[:-d]])
+        right = np.concatenate([kv[d:], np.full(d, big, np.uint32)])
+        wmin = np.minimum(wmin, np.minimum(left, right))
+    return kv == wmin
+
+
+def pack_seeds_np(symbols: np.ndarray, cfg: MarsConfig) -> np.ndarray:
+    """Offline numpy twin used by the index builder.  symbols: (N,) int."""
+    N = symbols.shape[0]
+    w, q = cfg.seed_width, cfg.quant_bits
+    n = N - w + 1
+    key = np.zeros(n, np.uint64)
+    for j in range(w):
+        key = (key << np.uint64(q)) | symbols[j:j + n].astype(np.uint64)
+    return mix32_np(key).astype(np.uint32)

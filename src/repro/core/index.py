@@ -1,0 +1,110 @@
+"""Reference index construction (paper Fig. 1, stage A — offline).
+
+The reference genome's expected event sequence (forward ++ reverse strand,
+"double genome") is quantized with global statistics, packed into seed keys
+and stored in a direct-address bucket table:
+
+    bucket_start : (2^h + 1,) int32   prefix offsets into the entry arrays
+    entries_key  : (N,) uint32        full hash key per entry (collision check)
+    entries_pos  : (N,) int32         seed position in double-genome coords
+    entries_cnt  : (N,) int32         occurrences of this exact key in the
+                                      reference (exact frequency-filter input)
+
+Built offline with numpy (the paper treats indexing as offline as well); the
+arrays are then device_put / sharded for the online mapping stage.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.config import MarsConfig
+from repro.core import hashing
+
+
+@dataclasses.dataclass
+class Index:
+    bucket_start: np.ndarray   # (2^h + 1,) int32
+    entries_key: np.ndarray    # (N,) uint32
+    entries_pos: np.ndarray    # (N,) int32
+    entries_cnt: np.ndarray    # (N,) int32
+    n_ref_events: int          # Le (single strand)
+    n_entries: int
+    cfg: MarsConfig
+
+    @property
+    def nbytes(self) -> int:
+        return (self.bucket_start.nbytes + self.entries_key.nbytes +
+                self.entries_pos.nbytes + self.entries_cnt.nbytes)
+
+
+def quantize_reference_events(events: np.ndarray, cfg: MarsConfig) -> np.ndarray:
+    """Global z-normalization + uniform buckets (numpy twin of
+    quantization.quantize_events_float)."""
+    mean, std = float(events.mean()), float(events.std()) + 1e-6
+    z = (events - mean) / std
+    clip = cfg.quant_clip_sigma
+    step = (2.0 * clip) / cfg.quant_levels
+    sym = np.floor((np.clip(z, -clip, clip - 1e-4) + clip) / step)
+    return np.clip(sym.astype(np.int64), 0, cfg.quant_levels - 1)
+
+
+def build_index(ref_events_concat: np.ndarray, n_ref_events: int,
+                cfg: MarsConfig) -> Index:
+    """ref_events_concat: (2*Le,) f32 — forward ++ reverse expected events."""
+    if ref_events_concat.shape[0] >= (1 << 23):
+        raise ValueError(
+            "double genome must stay under 2^23 events so (t_pos, q_pos) "
+            "packs into a non-negative int32 sort key (chaining.py); shard "
+            "larger references across the model axis instead.")
+    if cfg.max_events > (1 << 8):
+        raise ValueError("max_events must fit the 8-bit q_pos field")
+    sym = quantize_reference_events(ref_events_concat.astype(np.float64), cfg)
+    keys = hashing.pack_seeds_np(sym, cfg)                 # (2Le - w + 1,)
+    pos = np.arange(keys.shape[0], dtype=np.int64)
+    # drop seeds spanning the forward/reverse junction
+    Le, w = n_ref_events, cfg.seed_width
+    keep = ~((pos > Le - w) & (pos < Le))
+    # minimizer winnowing (same rule as the online side)
+    keep &= hashing.minimizer_mask_np(keys, cfg.minimizer_radius)
+    keys, pos = keys[keep], pos[keep]
+
+    # exact per-key occurrence counts (frequency filter input)
+    order_k = np.argsort(keys, kind="stable")
+    ks = keys[order_k]
+    uniq, inv_start, counts = np.unique(ks, return_index=True,
+                                        return_counts=True)
+    cnt_sorted = np.repeat(counts, counts)
+    cnt = np.empty_like(cnt_sorted)
+    cnt[order_k] = cnt_sorted
+
+    # bucket layout: sort by (bucket, key) so equal keys are contiguous
+    mask = np.uint32(cfg.n_buckets - 1)
+    bucket = (keys & mask).astype(np.int64)
+    order = np.lexsort((keys, bucket))
+    bucket_s, keys_s, pos_s, cnt_s = (bucket[order], keys[order], pos[order],
+                                      cnt[order])
+    bucket_start = np.zeros(cfg.n_buckets + 1, np.int64)
+    np.add.at(bucket_start, bucket_s + 1, 1)
+    bucket_start = np.cumsum(bucket_start)
+
+    return Index(
+        bucket_start=bucket_start.astype(np.int32),
+        entries_key=keys_s.astype(np.uint32),
+        entries_pos=pos_s.astype(np.int32),
+        entries_cnt=np.minimum(cnt_s, np.iinfo(np.int32).max).astype(np.int32),
+        n_ref_events=n_ref_events,
+        n_entries=int(keys_s.shape[0]),
+        cfg=cfg,
+    )
+
+
+def index_arrays(index: Index):
+    """The jit-friendly pytree of device arrays."""
+    return dict(
+        bucket_start=index.bucket_start,
+        entries_key=index.entries_key,
+        entries_pos=index.entries_pos,
+        entries_cnt=index.entries_cnt,
+    )

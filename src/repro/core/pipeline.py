@@ -1,0 +1,147 @@
+"""End-to-end MARS read-mapping pipeline (paper Fig. 1 / Fig. 7 dataflow).
+
+The per-read program chains the fine-grained tasks exactly as the MARS
+Control Unit sequences them (Section 6.1.3):
+
+    (1) event detection: signal-to-event conversion (1a) + quantization (1b)
+    (2) seeding: hash-value generation (c), frequency filter (d),
+        hash-table query (e), seed-and-vote filter (f)
+    (3) chaining: bucket/sort (g,h) + dynamic programming (i)
+
+Everything is static-shape and jit-compiled; `map_chunk` vmaps the per-read
+program over a chunk of reads (a "channel stripe" in MARS terms).  Counter
+outputs feed the analytic SSD performance model (ssd_model.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import chaining, events, hashing, quantization, seeding, vote
+from repro.core.config import MarsConfig
+from repro.core.index import Index, index_arrays
+
+
+class MapOutput(NamedTuple):
+    t_start: jnp.ndarray    # (R,) int32 double-genome event coords
+    score: jnp.ndarray      # (R,) f32
+    mapped: jnp.ndarray     # (R,) bool
+    n_events: jnp.ndarray   # (R,) int32
+    counters: Dict[str, jnp.ndarray]
+
+
+def map_read(signal: jnp.ndarray, index: Dict[str, jnp.ndarray],
+             cfg: MarsConfig, gather=None, sorter=None, dp=None,
+             detector=None):
+    """signal: (S,) f32 -> per-read mapping + counters."""
+    # (1) event detection
+    if detector is None:
+        ev, n_ev, _ = events.detect_events(signal, cfg)
+    else:
+        ev, n_ev = detector(signal)
+    ev_valid = jnp.arange(cfg.max_events) < n_ev
+    sym = quantization.quantize_events(ev, ev_valid, cfg)
+    # (2) seeding
+    keys, seed_valid = hashing.pack_seeds(sym, n_ev, cfg)
+    seed_valid = hashing.minimizer_mask(keys, seed_valid,
+                                        cfg.minimizer_radius)
+    t_pos, hit_valid, c_seed = seeding.query_index(keys, seed_valid, index,
+                                                   cfg, gather=gather)
+    q_pos = jnp.broadcast_to(
+        jnp.arange(cfg.max_events, dtype=jnp.int32)[:, None], t_pos.shape)
+    hit_valid, c_vote = vote.vote_filter(q_pos, t_pos, hit_valid, cfg)
+    # (3) chaining
+    res, c_chain = chaining.chain_anchors(q_pos, t_pos, hit_valid, cfg,
+                                          sorter=sorter, dp=dp)
+    counters = dict(n_events=n_ev, **c_seed, **c_vote, **c_chain)
+    return res, counters
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "use_kernels"))
+def map_chunk(signals: jnp.ndarray, index: Dict[str, jnp.ndarray],
+              cfg: MarsConfig, use_kernels: bool = False) -> MapOutput:
+    """signals: (R, S) f32.  The jit'd mapping program for one chunk."""
+    gather = sorter = dp = detector = None
+    if use_kernels:
+        from repro.kernels.pluto_lookup import ops as pluto_ops
+        from repro.kernels.bitonic_sort import ops as bitonic_ops
+        from repro.kernels.chain_dp import ops as dp_ops
+        from repro.kernels.event_detect import ops as ed_ops
+        gather = pluto_ops.lookup
+        sorter = bitonic_ops.sort1d
+        dp = lambda q, t, v: tuple(
+            x[0] for x in dp_ops.chain_dp(q[None], t[None], v[None], cfg))
+        if cfg.fixed_point and cfg.early_quantization:
+            detector = lambda s: tuple(
+                x[0] for x in ed_ops.event_detect(s[None], cfg))
+    fn = lambda s: map_read(s, index, cfg, gather=gather, sorter=sorter,
+                            dp=dp, detector=detector)
+    res, counters = jax.vmap(fn)(signals)
+    summed = {k: v.sum().astype(jnp.int32) for k, v in counters.items()}
+    summed["n_reads"] = jnp.int32(signals.shape[0])
+    summed["n_samples"] = jnp.int32(signals.shape[0] * signals.shape[1])
+    return MapOutput(t_start=res.t_start, score=res.score, mapped=res.mapped,
+                     n_events=counters["n_events"].astype(jnp.int32),
+                     counters=summed)
+
+
+# --------------------------------------------------------------------------- #
+# Host-side driver + accuracy scoring
+# --------------------------------------------------------------------------- #
+class Mapper:
+    """Convenience host wrapper: owns the index arrays and chunks reads."""
+
+    def __init__(self, index: Index, cfg: Optional[MarsConfig] = None,
+                 use_kernels: bool = False):
+        self.index = index
+        self.cfg = cfg or index.cfg
+        self.use_kernels = use_kernels
+        self.arrays = {k: jnp.asarray(v) for k, v in index_arrays(index).items()}
+
+    def map_signals(self, signals: np.ndarray, chunk: int = 64) -> MapOutput:
+        outs = []
+        for lo in range(0, signals.shape[0], chunk):
+            part = signals[lo:lo + chunk]
+            if part.shape[0] < chunk:   # pad to static chunk size
+                pad = chunk - part.shape[0]
+                part = np.concatenate([part, np.zeros((pad,) + part.shape[1:],
+                                                      part.dtype)])
+            outs.append(map_chunk(jnp.asarray(part), self.arrays, self.cfg,
+                                  self.use_kernels))
+        n = signals.shape[0]
+        t_start = np.concatenate([np.asarray(o.t_start) for o in outs])[:n]
+        score = np.concatenate([np.asarray(o.score) for o in outs])[:n]
+        mapped = np.concatenate([np.asarray(o.mapped) for o in outs])[:n]
+        n_events = np.concatenate([np.asarray(o.n_events) for o in outs])[:n]
+        counters: Dict[str, int] = {}
+        for o in outs:
+            for k, v in o.counters.items():
+                counters[k] = counters.get(k, 0) + int(v)
+        return MapOutput(t_start=t_start, score=score, mapped=mapped,
+                         n_events=n_events, counters=counters)
+
+
+def score_accuracy(out: MapOutput, true_pos: np.ndarray,
+                   true_strand: np.ndarray, mappable: np.ndarray,
+                   n_bases: np.ndarray, n_ref_events: int,
+                   tol: int = 100) -> Dict[str, float]:
+    """Precision/recall/F1 against simulator ground truth (UNCALLED
+    pafstats-style; paper Section 8.1)."""
+    t = np.asarray(out.t_start).astype(np.int64)
+    strand = (t >= n_ref_events).astype(np.int8)
+    span = np.maximum(np.asarray(n_bases).astype(np.int64), 1)
+    fwd = np.where(strand == 0, t, n_ref_events - 1 - ((t - n_ref_events) + span - 1))
+    mapped = np.asarray(out.mapped)
+    correct = (np.abs(fwd - true_pos) <= tol) & (strand == true_strand)
+    tp = int(np.sum(mapped & mappable & correct))
+    fp = int(np.sum(mapped & ~(mappable & correct)))
+    fn = int(np.sum(~mapped & mappable))
+    prec = tp / max(tp + fp, 1)
+    rec = tp / max(tp + fn, 1)
+    f1 = 2 * prec * rec / max(prec + rec, 1e-9)
+    return dict(precision=prec, recall=rec, f1=f1, tp=tp, fp=fp, fn=fn)

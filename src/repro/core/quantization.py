@@ -1,0 +1,73 @@
+"""Event quantization: normalized event means -> q-bit symbols.
+
+RawHash2 quantizes events into a small alphabet so that nearby signal levels
+share a symbol (noise tolerance).  MARS keeps the scheme but moves the
+raw-signal quantization earlier (events.py) and runs this step in integer
+arithmetic on the fixed-point path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import MarsConfig
+
+_EPS = 1e-6
+
+
+def quantize_events_float(events: jnp.ndarray, valid: jnp.ndarray,
+                          cfg: MarsConfig) -> jnp.ndarray:
+    """events: (E,) f32 (already in normalized signal units); valid: (E,) bool.
+    Returns (E,) int32 symbols in [0, 2^q)."""
+    vf = valid.astype(jnp.float32)
+    n = jnp.maximum(vf.sum(), 1.0)
+    mean = (events * vf).sum() / n
+    var = (jnp.square(events - mean) * vf).sum() / n
+    std = jnp.sqrt(var) + _EPS
+    z = (events - mean) / std
+    clip = cfg.quant_clip_sigma
+    step = (2.0 * clip) / cfg.quant_levels
+    sym = jnp.floor((jnp.clip(z, -clip, clip - 1e-4) + clip) / step)
+    return jnp.clip(sym.astype(jnp.int32), 0, cfg.quant_levels - 1)
+
+
+def quantize_events_fixed(events_q: jnp.ndarray, valid: jnp.ndarray,
+                          cfg: MarsConfig) -> jnp.ndarray:
+    """Integer-arithmetic variant.  events_q: (E,) int32 event means in the
+    Q-format of cfg.frac_bits (i.e. value * 2^frac_bits).
+
+    Uses int32 adds, multiplies and divides only (the Arithmetic Unit's op
+    set, paper Section 6.2); the variance accumulation carries a >>1
+    prescale per operand so the sum over max_events stays in int32.
+    """
+    v = valid.astype(jnp.int32)
+    e = events_q.astype(jnp.int32)
+    n = jnp.maximum(v.sum(), 1)
+    mean = (e * v).sum() // n
+    d = e - mean
+    d2 = d >> 1
+    var = ((d2 * d2 * v).sum() // n) << 2
+    # integer sqrt via Newton iterations (fixed 24 steps covers int32 range)
+    def newton(_, s):
+        return (s + var // jnp.maximum(s, 1)) // 2
+    s0 = jnp.maximum(var, 1)
+    std = jax.lax.fori_loop(0, 24, newton, s0)
+    std = jnp.maximum(std, 1)
+    # z in Q-format: z_q = d * 2^f / std ; symbol = floor((z+clip)/step)
+    f = cfg.frac_bits
+    clip_q = jnp.int32(round(cfg.quant_clip_sigma * (1 << f)))
+    z_q = (d << f) // std
+    z_q = jnp.clip(z_q, -clip_q, clip_q - 1)
+    step_q = (2 * clip_q) // cfg.quant_levels
+    sym = (z_q + clip_q) // jnp.maximum(step_q, 1)
+    return jnp.clip(sym.astype(jnp.int32), 0, cfg.quant_levels - 1)
+
+
+def quantize_events(events: jnp.ndarray, valid: jnp.ndarray,
+                    cfg: MarsConfig) -> jnp.ndarray:
+    """Dispatch on the arithmetic path.  `events` is always f32 in normalized
+    units (events.py already folded the Q-format scale back)."""
+    if cfg.fixed_point:
+        eq = jnp.round(events * (1 << cfg.frac_bits)).astype(jnp.int32)
+        return quantize_events_fixed(eq, valid, cfg)
+    return quantize_events_float(events, valid, cfg)

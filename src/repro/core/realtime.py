@@ -1,0 +1,95 @@
+"""Real-time incremental mapping with early termination (Read Until).
+
+The motivation for real-time RSGA (paper Section 1) is that a mapping
+decision made BEFORE the full read is sequenced lets the sequencer eject
+the molecule — saving pore time and enabling targeted sequencing
+(UNCALLED / Readfish / RawHash use-case).  This module maps each read
+incrementally over growing signal prefixes and stops at the first
+confident decision.
+
+Each prefix length is a separate jit specialization of the same pipeline
+(static shapes); the host driver advances only unresolved reads to the
+next stage — mirroring how a sequencer streams chunks per channel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import MarsConfig
+from repro.core.index import Index, index_arrays
+from repro.core.pipeline import map_chunk
+
+
+@dataclasses.dataclass
+class RealtimeResult:
+    t_start: np.ndarray       # (R,) final mapping position
+    score: np.ndarray         # (R,)
+    mapped: np.ndarray        # (R,) bool
+    samples_used: np.ndarray  # (R,) samples consumed before the decision
+    stage_of: np.ndarray      # (R,) stage index of the decision (-1 = full)
+
+    @property
+    def mean_fraction_used(self) -> float:
+        return float(self.samples_used.mean() / self.samples_used.max())
+
+
+def _stage_cfg(cfg: MarsConfig, length: int) -> MarsConfig:
+    return cfg.replace(signal_len=length,
+                       max_events=max(32, min(cfg.max_events, length // 5)))
+
+
+def map_realtime(signals: np.ndarray, index: Index, cfg: MarsConfig,
+                 stages: Sequence[int] = (256, 512, 768, 1024),
+                 min_score: float = 8.0, chunk: int = 64) -> RealtimeResult:
+    """signals: (R, S) f32.  `stages` are prefix lengths (last == S).
+
+    A read is resolved at the earliest stage where it maps with
+    score >= min_score; unresolved reads fall through to the full-length
+    decision (scored with cfg.min_chain_score as usual).
+    """
+    R, S = signals.shape
+    assert stages[-1] == S, (stages, S)
+    arrays = {k: jnp.asarray(v) for k, v in index_arrays(index).items()}
+
+    t_start = np.zeros(R, np.int64)
+    score = np.zeros(R, np.float32)
+    mapped = np.zeros(R, bool)
+    samples_used = np.full(R, S, np.int64)
+    stage_of = np.full(R, -1, np.int32)
+    unresolved = np.ones(R, bool)
+
+    for si, L in enumerate(stages):
+        idxs = np.nonzero(unresolved)[0]
+        if idxs.size == 0:
+            break
+        scfg = _stage_cfg(cfg, L)
+        last = si == len(stages) - 1
+        thresh = scfg.min_chain_score if last else min_score
+        for lo in range(0, idxs.size, chunk):
+            sel = idxs[lo:lo + chunk]
+            part = signals[sel, :L]
+            if part.shape[0] < chunk:          # pad to the jit shape
+                pad = np.zeros((chunk - part.shape[0], L), np.float32)
+                part = np.concatenate([part, pad])
+            out = map_chunk(jnp.asarray(part), arrays, scfg)
+            o_t = np.asarray(out.t_start)[:sel.size]
+            o_s = np.asarray(out.score)[:sel.size]
+            o_m = np.asarray(out.mapped)[:sel.size]
+            decide = (o_m & (o_s >= thresh)) if not last else o_m
+            done = sel[decide]
+            t_start[done] = o_t[decide]
+            score[done] = o_s[decide]
+            mapped[done] = True
+            samples_used[done] = L
+            stage_of[done] = si
+            unresolved[done] = False
+            if last:
+                rest = sel[~decide]
+                samples_used[rest] = L
+                unresolved[rest] = False
+    return RealtimeResult(t_start=t_start, score=score, mapped=mapped,
+                          samples_used=samples_used, stage_of=stage_of)

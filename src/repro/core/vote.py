@@ -1,0 +1,50 @@
+"""Seed-and-vote filtering (paper Section 5.1, Fig. 2) — first applied to raw
+signals by MARS, placed after quantization + hash query to tolerate noise.
+
+The reference is partitioned into overlapping, equal-length windows over the
+*projected alignment start* (t_pos - q_pos).  Each anchor votes for the two
+overlapping windows containing it (50% overlap); anchors whose best window
+gathers fewer than `thresh_voting` votes are discarded before chaining.
+
+Votes accumulate in a mod-hash bin table (vote_bins) — the same bounded-
+memory trade the in-storage Arithmetic Units make (they own a fixed register
+file per subarray pair).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import MarsConfig
+
+
+def vote_filter(q_pos: jnp.ndarray, t_pos: jnp.ndarray, valid: jnp.ndarray,
+                cfg: MarsConfig) -> Tuple[jnp.ndarray, Dict]:
+    """q_pos, t_pos: (E,H) int32; valid: (E,H) bool.  Returns (valid', counters).
+
+    Window id = projected start >> voting_window_log2; anchors vote for wid
+    and wid+1 (overlapping windows); an anchor survives if either window it
+    voted for reaches thresh_voting.
+    """
+    if not cfg.use_vote_filter:
+        return valid, dict(n_anchors_postvote=valid.sum(),
+                           n_votes_cast=jnp.int32(0))
+    v = cfg.voting_window_log2
+    nbins = cfg.vote_bins
+    diag = t_pos - q_pos                                    # projected start
+    # shift to non-negative before the bit ops (diag can be slightly < 0)
+    diag = diag + (1 << 20)
+    w1 = (diag >> v) % nbins
+    w2 = ((diag >> v) + 1) % nbins
+    ones = valid.astype(jnp.int32).reshape(-1)
+    votes = jax.ops.segment_sum(ones, w1.reshape(-1), num_segments=nbins)
+    votes = votes + jax.ops.segment_sum(ones, w2.reshape(-1),
+                                        num_segments=nbins)
+    v1 = jnp.take(votes, w1, axis=0)
+    v2 = jnp.take(votes, w2, axis=0)
+    keep = valid & (jnp.maximum(v1, v2) >= cfg.thresh_voting)
+    counters = dict(n_anchors_postvote=keep.sum(),
+                    n_votes_cast=2 * valid.sum())
+    return keep, counters

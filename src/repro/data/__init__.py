@@ -1,0 +1,1 @@
+"""Data pipelines: deterministic, restartable synthetic token streams."""

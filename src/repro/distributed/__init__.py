@@ -1,0 +1,1 @@
+"""Distribution: sharding rules, quantized collectives, pipeline stages."""

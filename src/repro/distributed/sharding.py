@@ -1,0 +1,146 @@
+"""Sharding rules: parameter / optimizer / activation / cache layouts.
+
+Policy (DESIGN.md Section 6):
+  * TP  — attention heads, FFN hidden, vocab, experts over 'model';
+  * FSDP — the other big dim over ('pod','data') (ZeRO-3 under GSPMD:
+    optimizer states inherit param shardings);
+  * activations/batches over the DP axes; KV caches shard batch over DP and
+    heads (or head_dim when head count is not divisible) over 'model'.
+
+Every rule degrades gracefully: an axis is applied to a dim only if the dim
+is divisible by the axis size (else that dim is replicated) — this is what
+lets the same rules drive the 2x16x16 production mesh and a 1x2x2 test mesh.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.launch.mesh import axis_size, dp_axes
+
+
+def _maybe(mesh: Mesh, dim: int, axes) -> Optional[Any]:
+    """Use `axes` for this dim only if divisible; else replicate.  Axes not
+    present in the mesh are dropped (pure-FSDP meshes have no 'model')."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        if axes not in mesh.axis_names:
+            return None
+    else:
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        if not axes:
+            return None
+    if dim % axis_size(mesh, axes) == 0:
+        return axes
+    # try a suffix of the axis tuple (e.g. drop 'pod', keep 'data')
+    if isinstance(axes, tuple) and len(axes) > 1:
+        return _maybe(mesh, dim, axes[1:])
+    return None
+
+
+def _spec(mesh: Mesh, shape: Tuple[int, ...], template) -> P:
+    assert len(template) == len(shape), (template, shape)
+    return P(*[_maybe(mesh, d, t) for d, t in zip(shape, template)])
+
+
+# --------------------------------------------------------------------------- #
+# Parameters
+# --------------------------------------------------------------------------- #
+def param_spec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    fsdp = dp_axes(mesh)
+    tp = "model"
+    name = path.split("/")[-1]
+    nd = len(shape)
+
+    if name == "embed":
+        return _spec(mesh, shape, (tp, fsdp))
+    if name == "lm_head":
+        return _spec(mesh, shape, (fsdp, tp))
+    if name == "enc_pos":
+        return P(*([None] * nd))
+    if name == "router":                      # (G, d, E): E over model (EP)
+        return _spec(mesh, shape, (None, None, tp))
+    if name in ("wq", "wk", "wv", "w_gate", "w_up", "sh_gate", "sh_up",
+                "in_proj"):
+        if nd == 4:                           # MoE expert stack (G,E,d,f)
+            return _spec(mesh, shape, (None, tp, fsdp, None))
+        return _spec(mesh, shape, (None, fsdp, tp))
+    if name in ("wo", "w_down", "sh_down", "out_proj"):
+        if nd == 4:                           # (G,E,f,d)
+            return _spec(mesh, shape, (None, tp, None, fsdp))
+        return _spec(mesh, shape, (None, tp, fsdp))
+    # norms, conv weights, scalars: replicated
+    return P(*([None] * nd))
+
+
+def _tree_paths(tree) -> Dict[str, Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for kp, leaf in flat:
+        path = "/".join(
+            k.key if hasattr(k, "key") else str(k.idx) for k in kp)
+        out[path] = leaf
+    return out, treedef
+
+
+def param_shardings(params_abstract, mesh: Mesh):
+    """Pytree of NamedSharding matching a (possibly abstract) param tree."""
+    def one(kp, leaf):
+        path = "/".join(k.key if hasattr(k, "key") else str(getattr(k, "idx", k))
+                        for k in kp)
+        return NamedSharding(mesh, param_spec(path, leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(one, params_abstract)
+
+
+# --------------------------------------------------------------------------- #
+# Activations / batches / caches
+# --------------------------------------------------------------------------- #
+def batch_specs(cfg: ArchConfig, mesh: Mesh, batch_abstract) -> Any:
+    dp = dp_axes(mesh)
+
+    def one(kp, leaf):
+        name = kp[-1].key if hasattr(kp[-1], "key") else str(kp[-1])
+        shape = leaf.shape
+        if name in ("tokens", "labels"):
+            return NamedSharding(mesh, _spec(mesh, shape, (dp, None)))
+        if name == "ctx":                       # (B, Tc, d)
+            return NamedSharding(mesh, _spec(mesh, shape, (dp, None, None)))
+        if name == "signals":                   # (R, S) raw reads
+            return NamedSharding(mesh, _spec(mesh, shape, (dp, None)))
+        return NamedSharding(mesh, P(*([None] * len(shape))))
+    return jax.tree_util.tree_map_with_path(one, batch_abstract)
+
+
+def cache_spec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    dp = dp_axes(mesh)
+    name = path.split("/")[-1]
+    if name in ("k", "v", "k_scale", "v_scale"):   # (G, B, T, K, Dh|1)
+        head_ax = _maybe(mesh, shape[3], "model")
+        dh_ax = None if head_ax else _maybe(mesh, shape[4], "model")
+        return P(None, _maybe(mesh, shape[1], dp), None, head_ax, dh_ax)
+    if name == "state":                        # (G, B, H, N, P)
+        return P(None, _maybe(mesh, shape[1], dp),
+                 _maybe(mesh, shape[2], "model"), None, None)
+    if name == "conv":                         # (G, B, W-1, d_inner)
+        return P(None, _maybe(mesh, shape[1], dp), None,
+                 _maybe(mesh, shape[3], "model"))
+    return P(*([None] * len(shape)))
+
+
+def cache_shardings(cache_abstract, mesh: Mesh):
+    def one(kp, leaf):
+        path = "/".join(k.key if hasattr(k, "key") else str(getattr(k, "idx", k))
+                        for k in kp)
+        return NamedSharding(mesh, cache_spec(path, leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(one, cache_abstract)
+
+
+def replicated(tree_abstract, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda l: NamedSharding(mesh, P(*([None] * len(l.shape)))),
+        tree_abstract)

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for MARS's compute hot-spots.
+
+Each kernel package has:
+    <name>.py  — pl.pallas_call + explicit BlockSpec VMEM tiling
+    ops.py     — jit'd public wrapper (padding, dtype plumbing, vmap rules)
+    ref.py     — pure-jnp oracle the kernel is tested against
+
+Kernels target TPU; on this CPU-only container they run (and are tested)
+in interpret mode.  `INTERPRET` flips automatically.
+"""
+import jax
+
+INTERPRET = jax.default_backend() == "cpu"

@@ -1,0 +1,1 @@
+from repro.kernels.bitonic_sort.ops import sort1d, sort_batch  # noqa: F401

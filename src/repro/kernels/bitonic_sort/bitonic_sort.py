@@ -1,0 +1,73 @@
+"""Bitonic sort network as a Pallas TPU kernel.
+
+MARS sorts anchors with an in-controller bitonic Sorter (<=128 elements)
+feeding a streaming bitonic Merger (paper Section 6.4).  On TPU the same
+network maps onto vector registers: the compare-exchange partner at XOR
+distance j is obtained by reversing sub-vectors of length 2j —
+
+    x[i ^ j]  ==  reshape(rev(reshape(x, (L/2j, 2, j)), axis=1), (L,))
+
+a pure layout operation (no gather), and the min/max select runs on the VPU.
+Stages with k <= 128 correspond to MARS's Sorter-128 blocks; the k > 128
+stages are the Merger's merge passes — one kernel expresses both units.
+
+Block layout: one read's anchor keys per program, (1, L) int32 in VMEM,
+L a power of two (<= 8192 -> 32 KiB).  Ascending sort; pad with INT32_MAX.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro import kernels as K
+
+MAX_BLOCK = 8192
+
+
+def _xor_swap(x: jnp.ndarray, j: int) -> jnp.ndarray:
+    """x: (1, L) -> x[i ^ j] via sub-vector reversal (j power of two)."""
+    L = x.shape[1]
+    y = x.reshape(L // (2 * j), 2, j)
+    y = jnp.flip(y, axis=1)
+    return y.reshape(1, L)
+
+
+def _kernel(x_ref, out_ref, *, L: int):
+    x = x_ref[...]                                   # (1, L) int32
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, L), 1)
+    k = 2
+    while k <= L:
+        j = k // 2
+        while j >= 1:
+            p = _xor_swap(x, j)
+            up = (lane & k) == 0 if k < L else jnp.ones((1, L), jnp.bool_)
+            is_lo = (lane & j) == 0
+            take_min = up == is_lo
+            x = jnp.where(take_min, jnp.minimum(x, p), jnp.maximum(x, p))
+            j //= 2
+        k *= 2
+    out_ref[...] = x
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitonic_sort(keys: jnp.ndarray, interpret: bool | None = None):
+    """keys: (B, L) int32, L power of two <= MAX_BLOCK.  Sorts each row
+    ascending (grid over rows; each row = one Sorter/Merger stream)."""
+    if interpret is None:
+        interpret = K.INTERPRET
+    B, L = keys.shape
+    assert L & (L - 1) == 0 and L <= MAX_BLOCK, L
+    return pl.pallas_call(
+        functools.partial(_kernel, L=L),
+        grid=(B,),
+        in_specs=[pl.BlockSpec((1, L), lambda b: (b, 0))],
+        out_specs=pl.BlockSpec((1, L), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, L), jnp.int32),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+    )(keys)

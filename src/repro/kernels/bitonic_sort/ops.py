@@ -1,0 +1,35 @@
+"""Public wrappers for the bitonic sort kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.bitonic_sort.bitonic_sort import MAX_BLOCK, bitonic_sort
+
+_PAD = jnp.int32(0x7FFFFFFF)
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def sort_batch(keys: jnp.ndarray) -> jnp.ndarray:
+    """keys: (B, L) int32 -> each row sorted ascending."""
+    B, L = keys.shape
+    Lp = max(128, _next_pow2(L))
+    if Lp > MAX_BLOCK:
+        # beyond one VMEM block: fall back to XLA sort (documented limit;
+        # the distributed pipeline shards anchors well below this).
+        return jnp.sort(keys, axis=-1)
+    if Lp != L:
+        pad = jnp.full((B, Lp - L), _PAD, jnp.int32)
+        keys = jnp.concatenate([keys, pad], axis=1)
+    out = bitonic_sort(keys.astype(jnp.int32))
+    return out[:, :L]
+
+
+def sort1d(keys: jnp.ndarray) -> jnp.ndarray:
+    """keys: (L,) int32 ascending.  vmap-safe via expand/squeeze."""
+    return sort_batch(keys.reshape(1, -1))[0]

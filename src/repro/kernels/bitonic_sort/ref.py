@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for bitonic_sort."""
+import jax.numpy as jnp
+
+
+def sort_ref(keys: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sort(keys, axis=-1)

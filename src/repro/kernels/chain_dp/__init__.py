@@ -1,0 +1,1 @@
+from repro.kernels.chain_dp.ops import chain_dp  # noqa: F401

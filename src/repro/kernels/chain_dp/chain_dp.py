@@ -1,0 +1,105 @@
+"""Banded chaining DP as a Pallas TPU kernel.
+
+MARS runs the chaining dynamic program on word-serial Arithmetic Units next
+to the anchors in SSD-DRAM (paper Section 6.4).  The TPU analogue keeps one
+read's sorted anchors resident in VMEM and walks them with a fori_loop whose
+inner band (B predecessors) is a vector op — the band is the VPU lane
+dimension, the anchor walk is the sequential axis.
+
+Block layout: one read per program; q/t/valid (1, A) int32 blocks, band
+window B read with dynamic slices from the carried (1, A+B) state.  The
+arithmetic matches core/chaining.chain_dp exactly (same jnp ops).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro import kernels as K
+
+NEG = -1e9
+_SENT = -(1 << 30)
+
+
+def _kernel(q_ref, t_ref, v_ref, f_ref, d_ref, *, A: int, B: int,
+            max_gap: int, gap_cost: float, skip_cost: float,
+            anchor_score: float):
+    q = q_ref[...].reshape(A)
+    t = t_ref[...].reshape(A)
+    v = v_ref[...].reshape(A) != 0
+
+    f0 = jnp.full((A + B,), NEG, jnp.float32)
+    d0 = jnp.zeros((A + B,), jnp.int32)
+    tp = jnp.concatenate([jnp.full((B,), _SENT, jnp.int32), t])
+    qp = jnp.concatenate([jnp.full((B,), _SENT, jnp.int32), q])
+
+    def step(i, carry):
+        f, d = carry
+        ti, qi, vi = t[i], q[i], v[i]
+        fw = jax.lax.dynamic_slice(f, (i,), (B,))
+        dw = jax.lax.dynamic_slice(d, (i,), (B,))
+        tw = jax.lax.dynamic_slice(tp, (i,), (B,))
+        qw = jax.lax.dynamic_slice(qp, (i,), (B,))
+        dt = ti - tw
+        dq = qi - qw
+        ok = (dt > 0) & (dq > 0) & (dt <= max_gap) & (dq <= max_gap)
+        gap = jnp.abs(dt - dq).astype(jnp.float32)
+        skip = jnp.minimum(dt, dq).astype(jnp.float32)
+        cand = fw - gap_cost * gap - skip_cost * skip
+        cand = jnp.where(ok & (fw > NEG / 2), cand, NEG)
+        bj = jnp.argmax(cand)
+        best = cand[bj]
+        ext = best > 0.0
+        fi = anchor_score + jnp.maximum(best, 0.0)
+        fi = jnp.where(vi, fi, NEG)
+        di = jnp.where(ext, dw[bj], ti - qi)
+        f = jax.lax.dynamic_update_slice(f, fi[None], (i + B,))
+        d = jax.lax.dynamic_update_slice(d, di[None], (i + B,))
+        return f, d
+
+    f, d = jax.lax.fori_loop(0, A, step, (f0, d0))
+    f_ref[...] = f[B:].reshape(1, A)
+    d_ref[...] = d[B:].reshape(1, A)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("B", "max_gap", "gap_cost", "skip_cost",
+                                    "anchor_score", "interpret"))
+def chain_dp_kernel(q: jnp.ndarray, t: jnp.ndarray, valid: jnp.ndarray, *,
+                    B: int, max_gap: int, gap_cost: float, skip_cost: float,
+                    anchor_score: float, interpret: bool | None = None):
+    """q, t: (R, A) int32 sorted anchors; valid: (R, A) bool.
+
+    Returns (f (R, A) f32, diag0 (R, A) int32).
+    """
+    if interpret is None:
+        interpret = K.INTERPRET
+    R, A = q.shape
+    kern = functools.partial(_kernel, A=A, B=B, max_gap=max_gap,
+                             gap_cost=gap_cost, skip_cost=skip_cost,
+                             anchor_score=anchor_score)
+    f, d = pl.pallas_call(
+        kern,
+        grid=(R,),
+        in_specs=[
+            pl.BlockSpec((1, A), lambda r: (r, 0)),
+            pl.BlockSpec((1, A), lambda r: (r, 0)),
+            pl.BlockSpec((1, A), lambda r: (r, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, A), lambda r: (r, 0)),
+            pl.BlockSpec((1, A), lambda r: (r, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, A), jnp.float32),
+            jax.ShapeDtypeStruct((R, A), jnp.int32),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+    )(q, t, valid.astype(jnp.int32))
+    return f, d

@@ -1,0 +1,17 @@
+"""Public wrapper for the chaining-DP kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.config import MarsConfig
+from repro.kernels.chain_dp.chain_dp import chain_dp_kernel
+
+
+def chain_dp(q: jnp.ndarray, t: jnp.ndarray, valid: jnp.ndarray,
+             cfg: MarsConfig):
+    """q, t: (R, A) int32 sorted by (t, q); valid: (R, A) bool.
+    Returns (f (R, A) f32, diag0 (R, A) int32)."""
+    return chain_dp_kernel(
+        q.astype(jnp.int32), t.astype(jnp.int32), valid,
+        B=cfg.chain_band, max_gap=cfg.max_gap, gap_cost=cfg.gap_cost,
+        skip_cost=cfg.skip_cost, anchor_score=cfg.anchor_score)

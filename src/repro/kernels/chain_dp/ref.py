@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for chain_dp: the core pipeline's own scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import chaining
+from repro.core.config import MarsConfig
+
+
+def chain_dp_ref(q: jnp.ndarray, t: jnp.ndarray, valid: jnp.ndarray,
+                 cfg: MarsConfig):
+    fn = lambda qq, tt, vv: chaining.chain_dp(qq, tt, vv, cfg)
+    return jax.vmap(fn)(q, t, valid)

@@ -1,0 +1,1 @@
+from repro.kernels.event_detect.ops import event_detect  # noqa: F401

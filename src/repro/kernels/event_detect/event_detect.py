@@ -1,0 +1,140 @@
+"""Event detection (signal -> events) as a Pallas TPU kernel.
+
+Implements MARS's fixed-point event-detection stage (paper Sections 5.2 +
+6.2): the early-quantized int16 signal is segmented with the integer
+(sqrt-free) t-statistic boundary test and reduced to per-segment means.
+
+TPU mapping of the near-DRAM Arithmetic Unit:
+  * word-serial window sums  -> lane-shifted adds on the VPU (w <= 8 shifts);
+  * per-sample boundary test -> branch-free integer compare vector;
+  * the peak-pick            -> shifted max-accumulation;
+  * event-id assignment      -> Hillis-Steele prefix sum (log2 S shift-adds);
+  * segment mean reduction   -> one-hot matmul on the MXU:
+        sums = x (1,S) @ onehot(eid) (S,E).
+
+Block layout: one read per program — signal (1, S) int32 Q-format in VMEM,
+outputs (1, E) f32 means and (1, 1) int32 event count.  All arithmetic
+matches core/events.py (the pure-jnp oracle) bit-for-bit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro import kernels as K
+
+_NEG = -3.0e38  # python float: jnp scalars would be captured as constants
+
+
+def _shift_left(x, d, fill):
+    """x: (1, S); returns x[:, i+d] with `fill` past the end (static d)."""
+    if d == 0:
+        return x
+    S = x.shape[1]
+    pad = jnp.full((1, d), fill, x.dtype)
+    return jnp.concatenate([x[:, d:], pad], axis=1)
+
+
+def _shift_right(x, d, fill):
+    if d == 0:
+        return x
+    S = x.shape[1]
+    pad = jnp.full((1, d), fill, x.dtype)
+    return jnp.concatenate([pad, x[:, : S - d]], axis=1)
+
+
+def _kernel(xq_ref, means_ref, nev_ref, *, S: int, E: int, w: int,
+            tau2: int, eps: int, peak_r: int, frac_bits: int):
+    x = xq_ref[...].astype(jnp.int32)                   # (1, S)
+
+    # ---- windowed sums (truncated windows at the borders == zero fill) ----
+    zero = jnp.int32(0)
+    sum_r = jnp.zeros_like(x)
+    sq_r = jnp.zeros_like(x)
+    sum_l = jnp.zeros_like(x)
+    sq_l = jnp.zeros_like(x)
+    for d in range(w):
+        xr = _shift_left(x, d, zero)                    # x[i+d]
+        sum_r = sum_r + xr
+        sq_r = sq_r + xr * xr
+        xl = _shift_right(x, d + 1, zero)               # x[i-1-d]
+        sum_l = sum_l + xl
+        sq_l = sq_l + xl * xl
+
+    # ---- integer boundary test (events.boundary_mask_fixed) ----
+    diff = (sum_r - sum_l) >> 2
+    ssd_l = w * sq_l - sum_l * sum_l
+    ssd_r = w * sq_r - sum_r * sum_r
+    lhs = diff * diff * w
+    rhs = tau2 * (((ssd_l + ssd_r) >> 4) + eps)
+    above = lhs > rhs
+    score = lhs.astype(jnp.float32) / (rhs.astype(jnp.float32) + 1.0)
+
+    # ---- peak pick: windowed max via shifts ----
+    wmax = score
+    for d in range(1, peak_r + 1):
+        wmax = jnp.maximum(wmax, _shift_left(score, d, _NEG))
+        wmax = jnp.maximum(wmax, _shift_right(score, d, _NEG))
+    lmax = score
+    for d in range(1, peak_r + 1):
+        lmax = jnp.maximum(lmax, _shift_right(score, d, _NEG))
+    boundary = (score >= wmax) & (score >= lmax) & above
+
+    # ---- event ids: inclusive prefix sum (Hillis-Steele) ----
+    eid = boundary.astype(jnp.int32)
+    d = 1
+    while d < S:
+        eid = eid + _shift_right(eid, d, zero)
+        d *= 2
+    n_events = jnp.minimum(eid[0, S - 1] + 1, E)
+    eid = jnp.minimum(eid, E - 1)                       # (1, S)
+
+    # ---- segment means: one-hot matmul on the MXU ----
+    bins = jax.lax.broadcasted_iota(jnp.int32, (S, E), 1)
+    onehot = (eid.reshape(S, 1) == bins).astype(jnp.float32)   # (S, E)
+    xf = x.astype(jnp.float32)                          # exact: |x| < 2^12
+    sums = jax.lax.dot(xf, onehot, precision=jax.lax.Precision.HIGHEST)
+    ones = jnp.ones((1, S), jnp.float32)
+    cnts = jax.lax.dot(ones, onehot, precision=jax.lax.Precision.HIGHEST)
+    means = sums / jnp.maximum(cnts, 1.0) / float(1 << frac_bits)
+
+    means_ref[...] = means                              # (1, E)
+    nev_ref[...] = n_events.reshape(1, 1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("E", "w", "tau2", "eps", "peak_r",
+                                    "frac_bits", "interpret"))
+def event_detect_fixed(xq: jnp.ndarray, *, E: int, w: int, tau2: int,
+                       eps: int, peak_r: int, frac_bits: int,
+                       interpret: bool | None = None):
+    """xq: (R, S) int16/int32 Q-format quantized signal.
+
+    Returns (means (R, E) f32 normalized units, n_events (R,) int32).
+    """
+    if interpret is None:
+        interpret = K.INTERPRET
+    R, S = xq.shape
+    kern = functools.partial(_kernel, S=S, E=E, w=w, tau2=tau2, eps=eps,
+                             peak_r=peak_r, frac_bits=frac_bits)
+    means, nev = pl.pallas_call(
+        kern,
+        grid=(R,),
+        in_specs=[pl.BlockSpec((1, S), lambda r: (r, 0))],
+        out_specs=[
+            pl.BlockSpec((1, E), lambda r: (r, 0)),
+            pl.BlockSpec((1, 1), lambda r: (r, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, E), jnp.float32),
+            jax.ShapeDtypeStruct((R, 1), jnp.int32),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+    )(xq.astype(jnp.int32))
+    return means, nev.reshape(R)

@@ -1,0 +1,26 @@
+"""Public wrapper for the event-detection kernel (MARS fixed-point path)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import events as ev
+from repro.core.config import MarsConfig
+from repro.kernels.event_detect.event_detect import event_detect_fixed
+
+
+def event_detect(signals: jnp.ndarray, cfg: MarsConfig):
+    """signals: (R, S) f32 raw.  Normalize + early-quantize on the host
+    graph, segment + reduce in the Pallas kernel.
+
+    Returns (means (R, E) f32, n_events (R,) int32) — matching
+    core.events.detect_events_batch under the ms_fixed config.
+    """
+    assert cfg.fixed_point and cfg.early_quantization, (
+        "kernel implements the MARS fixed-point path")
+    x = ev.robust_normalize(signals)
+    xq = ev.quantize_signal_fixed(x, cfg.frac_bits)
+    tau2 = int(round(cfg.tstat_threshold ** 2))
+    eps = 1 << (2 * cfg.frac_bits - 8)
+    return event_detect_fixed(
+        xq, E=cfg.max_events, w=cfg.tstat_window, tau2=tau2, eps=eps,
+        peak_r=cfg.peak_window, frac_bits=cfg.frac_bits)

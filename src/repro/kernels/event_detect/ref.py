@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for event_detect: the core pipeline's own path."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import events as ev
+from repro.core.config import MarsConfig
+
+
+def event_detect_ref(signals: jnp.ndarray, cfg: MarsConfig):
+    means, n_ev, _ = ev.detect_events_batch(signals, cfg)
+    return means, n_ev

@@ -1,0 +1,1 @@
+from repro.kernels.pluto_lookup.ops import lookup  # noqa: F401

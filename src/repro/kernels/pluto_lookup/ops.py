@@ -1,0 +1,30 @@
+"""Public wrapper for the pLUTo lookup kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.pluto_lookup.pluto_lookup import BQ, BT, pluto_lookup
+
+
+def _pad_to(x: jnp.ndarray, m: int, value) -> jnp.ndarray:
+    r = (-x.shape[-1]) % m
+    if r == 0:
+        return x
+    return jnp.concatenate([x, jnp.full((r,), value, x.dtype)])
+
+
+def lookup(table: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """out[i] = table[clip(idx[i], 0, N-1)] — drop-in for jnp.take(mode='clip').
+
+    table: (N,) int32/uint32/int16, idx: (..., ) int — any shape.
+    Routes through the Pallas pLUTo kernel (one-hot MXU sweep).
+    """
+    orig_dtype = table.dtype
+    orig_shape = idx.shape
+    n = table.shape[0]
+    idx_flat = jnp.clip(idx.reshape(-1).astype(jnp.int32), 0, n - 1)
+    table32 = table.astype(jnp.int32) if orig_dtype != jnp.int32 else table
+    tp = _pad_to(table32, BT, 0)
+    ip = _pad_to(idx_flat, BQ, 0)
+    out = pluto_lookup(tp, ip)[: idx_flat.shape[0]]
+    return out.reshape(orig_shape).astype(orig_dtype)

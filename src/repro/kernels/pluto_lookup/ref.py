@@ -1,0 +1,6 @@
+"""Pure-jnp oracle for pluto_lookup."""
+import jax.numpy as jnp
+
+
+def lookup_ref(table: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, idx, axis=0, mode="clip")

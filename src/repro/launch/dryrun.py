@@ -1,0 +1,272 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+cell on the production mesh with ShapeDtypeStruct stand-ins (no data is
+allocated), then record memory/cost/collective analyses for the roofline.
+
+MUST be run as its own process (the two lines above must execute before
+any jax import — device count locks at first init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh both --out results/dryrun
+
+Filters: --arch, --shape, --mesh {single,multi,both}, --skip-existing.
+The MARS pipeline itself is dry-run as the extra arch 'mars-rsga'.
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import hlo as hlo_lib
+from repro.analysis import roofline as rl
+from repro.configs import ARCHS, SHAPES, SHAPE_ORDER, cell_applicable, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.train import optimizer as opt
+from repro.train import steps as steps_lib
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _cost_items(compiled):
+    c = compiled.cost_analysis()
+    if isinstance(c, (list, tuple)):
+        c = c[0] if c else {}
+    return dict(c) if c else {}
+
+
+def _memory_stats(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return None, "memory_analysis unavailable"
+    if ma is None:
+        return None, "memory_analysis None"
+    try:
+        stats = dict(
+            argument_size=getattr(ma, "argument_size_in_bytes", None),
+            output_size=getattr(ma, "output_size_in_bytes", None),
+            temp_size=getattr(ma, "temp_size_in_bytes", None),
+            generated_code_size=getattr(ma, "generated_code_size_in_bytes",
+                                        None),
+        )
+        peak = sum(v for k, v in stats.items()
+                   if v and k in ("argument_size", "output_size",
+                                  "temp_size"))
+        return peak, json.dumps(stats)
+    except Exception as e:                                   # pragma: no cover
+        return None, f"memory_analysis parse error: {e}"
+
+
+def lower_cell(arch: str, shape_key: str, multi_pod: bool,
+               microbatches: int = 1, layout: str = "2d"):
+    """Build + lower + compile one cell.  Returns (CellResult, compiled)."""
+    mesh = make_production_mesh(multi_pod=multi_pod, layout=layout)
+    mesh_name = "multi" if multi_pod else "single"
+    chips = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+
+    if arch == "mars-rsga":
+        return _lower_mars_cell(shape_key, mesh, mesh_name, chips,
+                                schedule=os.environ.get("MARS_SCHEDULE",
+                                                        "a2a"))
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_key]
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        return rl.CellResult(
+            arch=arch, shape=shape_key, mesh=mesh_name, chips=chips,
+            flops_per_device=0, bytes_per_device=0, wire_bytes_per_device=0,
+            collective_detail={}, peak_memory_per_device=None, model_flops=0,
+            model_flops_basis="-", tokens=0, status="skip", note=why), None
+
+    params_abs = M.abstract_params(cfg)
+    batch_abs = steps_lib.make_batch_abstract(cfg, shape)
+    n_params = M.param_count(cfg)
+    n_active = M.active_param_count(cfg)
+
+    if shape.kind == "train":
+        adamw = opt.AdamWConfig()
+        _, jit_for, sh = steps_lib.make_train_step(
+            cfg, mesh, adamw, microbatches=microbatches)
+        fn = jit_for(batch_abs)
+        opt_abs = opt.abstract_state(params_abs)
+        lowered = fn.lower(params_abs, opt_abs, batch_abs)
+        tokens = shape.global_batch * shape.seq_len
+        model_flops, basis = 6.0 * n_active * tokens, "6ND"
+    elif shape.kind == "prefill":
+        _, jit_for, sh = steps_lib.make_prefill_step(
+            cfg, mesh, shape.seq_len, shape.global_batch)
+        fn = jit_for(batch_abs)
+        cache_abs = M.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+        args = [params_abs, batch_abs["tokens"], cache_abs]
+        if "ctx" in batch_abs:
+            args.append(batch_abs["ctx"])
+        lowered = fn.lower(*args)
+        tokens = shape.global_batch * shape.seq_len
+        model_flops, basis = 2.0 * n_active * tokens, "2ND"
+    else:  # decode
+        kv_dtype = (jnp.int8 if os.environ.get("KV_INT8") == "1"
+                    else jnp.bfloat16)
+        _, jit_for, sh = steps_lib.make_decode_step(
+            cfg, mesh, shape.seq_len, shape.global_batch, kv_dtype)
+        fn = jit_for(batch_abs)
+        cache_abs = M.abstract_cache(cfg, shape.global_batch, shape.seq_len,
+                                     kv_dtype)
+        args = [params_abs, batch_abs["tokens"], cache_abs,
+                SDS((), jnp.int32)]
+        if "ctx" in batch_abs:
+            args.append(batch_abs["ctx"])
+        lowered = fn.lower(*args)
+        tokens = shape.global_batch
+        model_flops, basis = 2.0 * n_active * tokens, "2ND"
+
+    compiled = lowered.compile()
+    cost = _cost_items(compiled)
+    text = compiled.as_text()
+    hl = hlo_lib.analyze(text)          # loop-aware flops/bytes/collectives
+    peak_mem, mem_note = _memory_stats(compiled)
+    note = (f"{mem_note}; cost_analysis(body-once): "
+            f"flops={cost.get('flops', 0):.3e} "
+            f"bytes={cost.get('bytes accessed', 0):.3e}; "
+            f"unknown_trip={hl.get('unknown_trip', 0):.0f}")
+    res = rl.CellResult(
+        arch=arch, shape=shape_key, mesh=mesh_name, chips=chips,
+        flops_per_device=float(hl["flops"]),
+        bytes_per_device=float(hl["bytes"]),
+        wire_bytes_per_device=float(hl["total"]),
+        collective_detail={k: v for k, v in hl.items()
+                           if k.startswith(("bytes_", "count_"))},
+        peak_memory_per_device=peak_mem,
+        model_flops=model_flops, model_flops_basis=basis, tokens=tokens,
+        note=note)
+    return res, compiled
+
+
+def _lower_mars_cell(shape_key: str, mesh, mesh_name: str, chips: int,
+                     schedule: str = "a2a"):
+    """Dry-run the distributed MARS mapper at production scale."""
+    from repro.core import distributed as D
+    from repro.core.config import MarsConfig
+
+    cfg = MarsConfig(hash_bits=18).with_mode("ms_fixed")
+    reads = {"map_8k": 8192, "map_32k": 32768}[shape_key]
+    n_model = mesh.shape["model"]
+    # D5-scale scaled index: ~4M entries over 2^18 buckets
+    emax = (4_000_000 // n_model) + 64
+    bl = cfg.n_buckets // n_model
+    parts_abs = dict(
+        p_bucket_start=SDS((n_model, bl + 1), jnp.int32),
+        p_entries_key=SDS((n_model, emax), jnp.uint32),
+        p_entries_pos=SDS((n_model, emax), jnp.int32),
+        p_entries_cnt=SDS((n_model, emax), jnp.int32),
+    )
+    signals_abs = SDS((reads, cfg.signal_len), jnp.float32)
+    fn = D.make_distributed_mapper(cfg, mesh, schedule=schedule)
+    lowered = fn.lower(signals_abs, parts_abs)
+    compiled = lowered.compile()
+    text = compiled.as_text()
+    hl = hlo_lib.analyze(text)
+    coll = {k: v for k, v in hl.items() if k.startswith(("bytes_", "count_"))}
+    coll["total"] = hl["total"]
+    peak_mem, mem_note = _memory_stats(compiled)
+    # "useful work" for the mapper: AU-op count per read chunk (ssd_model
+    # op inventory), converted to flops-equivalent.
+    from repro.core.ssd_model import OPS
+    useful = reads * (cfg.signal_len * OPS["ed_per_sample"] +
+                      cfg.max_events * OPS["quant_per_event"] +
+                      cfg.max_events * OPS["hash_per_seed"] +
+                      cfg.max_anchors * cfg.chain_band * OPS["dp_per_pair"])
+    res = rl.CellResult(
+        arch="mars-rsga", shape=shape_key, mesh=mesh_name, chips=chips,
+        flops_per_device=float(hl["flops"]),
+        bytes_per_device=float(hl["bytes"]),
+        wire_bytes_per_device=float(hl["total"]),
+        collective_detail=coll, peak_memory_per_device=peak_mem,
+        model_flops=float(useful), model_flops_basis="AU-ops", tokens=reads,
+        note=mem_note)
+    return res, compiled
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=("single", "multi", "both"))
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--include-mars", action="store_true")
+    ap.add_argument("--layout", default="2d", choices=("2d", "fsdp"),
+                    help="axis semantics: 2d = TP+FSDP ('data','model'); "
+                         "fsdp = pure data/FSDP (Perf hillclimb variant)")
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    assert jax.device_count() == 512, (
+        f"dry-run needs 512 placeholder devices, got {jax.device_count()}")
+
+    archs = list(ARCHS) if args.arch == "all" else [args.arch]
+    if args.include_mars and args.arch == "all":
+        archs.append("mars-rsga")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    for arch in archs:
+        shape_keys = (["map_8k"] if arch == "mars-rsga" else
+                      list(SHAPE_ORDER))
+        if args.shape != "all":
+            shape_keys = [args.shape]
+        for sk in shape_keys:
+            for mp in meshes:
+                mesh_name = "multi" if mp else "single"
+                fname = out_dir / f"{arch}__{sk}__{mesh_name}.json"
+                if args.skip_existing and fname.exists():
+                    print(f"[skip-existing] {fname.name}")
+                    continue
+                t0 = time.time()
+                try:
+                    res, compiled = lower_cell(
+                        arch, sk, mp, microbatches=args.microbatches,
+                        layout=args.layout)
+                    dt = time.time() - t0
+                    rl.save_cell(res, out_dir)
+                    if res.status == "ok":
+                        print(f"[ok] {arch} {sk} {mesh_name}: "
+                              f"flops/dev={res.flops_per_device:.3e} "
+                              f"wire/dev={res.wire_bytes_per_device:.3e} "
+                              f"bound={res.bottleneck} "
+                              f"roofline={res.roofline_fraction:.2%} "
+                              f"({dt:.0f}s)")
+                        if res.peak_memory_per_device:
+                            print(f"     mem/dev={res.peak_memory_per_device/2**30:.2f} GiB")
+                    else:
+                        print(f"[{res.status}] {arch} {sk} {mesh_name}: "
+                              f"{res.note}")
+                except Exception as e:
+                    dt = time.time() - t0
+                    print(f"[FAIL] {arch} {sk} {mesh_name} ({dt:.0f}s): {e}")
+                    traceback.print_exc()
+                    res = rl.CellResult(
+                        arch=arch, shape=sk, mesh=mesh_name, chips=0,
+                        flops_per_device=0, bytes_per_device=0,
+                        wire_bytes_per_device=0, collective_detail={},
+                        peak_memory_per_device=None, model_flops=0,
+                        model_flops_basis="-", tokens=0, status="error",
+                        note=str(e)[:500])
+                    rl.save_cell(res, out_dir)
+
+    cells = rl.load_cells(out_dir)
+    print("\n" + rl.format_table(cells))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Training launcher: fault-tolerant loop with checkpoint/resume, straggler
+monitoring and elastic restarts.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --reduced \
+        --steps 100 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+On this CPU container use --reduced; the full configs are exercised by the
+dry-run (launch/dryrun.py).  Restarting the same command resumes from the
+latest valid checkpoint — including on a different device count
+(reshard-on-restore).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import ShapeSpec
+from repro.data.tokens import TokenStream, TokenStreamState
+from repro.distributed import sharding as shlib
+from repro.launch.mesh import make_mesh
+from repro.models import model as M
+from repro.train import checkpoint as ckpt
+from repro.train import optimizer as opt
+from repro.train import steps as steps_lib
+from repro.train.monitor import StepMonitor
+
+
+def parse_mesh(spec: str, n_devices: int):
+    if spec == "auto":
+        if n_devices == 1:
+            return make_mesh((1, 1), ("data", "model"))
+        d = n_devices // 2
+        return make_mesh((d, 2), ("data", "model"))
+    dims = tuple(int(x) for x in spec.split("x"))
+    names = ("pod", "data", "model")[-len(dims):]
+    return make_mesh(dims, names)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--save-every", type=int, default=25)
+    ap.add_argument("--mesh", default="auto")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = parse_mesh(args.mesh, jax.device_count())
+    print(f"arch={cfg.name} devices={jax.device_count()} "
+          f"mesh={dict(mesh.shape)}")
+
+    adamw = opt.AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 2),
+                            total_steps=args.steps)
+    _, jit_for, sh = steps_lib.make_train_step(cfg, mesh, adamw)
+    shape = ShapeSpec("train", args.seq, args.batch, "train")
+    fn = jit_for(steps_lib.make_batch_abstract(cfg, shape))
+
+    # init or resume
+    start_step = 0
+    stream = TokenStream(cfg.vocab, args.batch, args.seq, seed=args.seed,
+                         n_ctx=cfg.n_ctx_tokens, d_model=cfg.d_model)
+    if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
+        state_abs = (M.abstract_params(cfg),
+                     opt.abstract_state(M.abstract_params(cfg)))
+        (params, opt_state), start_step, ds, _ = ckpt.restore(
+            args.ckpt_dir, state_abs, shardings=(sh["params"], sh["opt"]))
+        stream.state = TokenStreamState.from_dict(ds)
+        print(f"resumed from step {start_step}")
+    else:
+        params = jax.device_put(M.init_params(cfg, jax.random.key(args.seed)),
+                                sh["params"])
+        opt_state = jax.jit(opt.init_state, out_shardings=sh["opt"])(params)
+
+    mon = StepMonitor(on_straggler=lambda ev: print(
+        f"[straggler] step={ev.step} {ev.step_time:.2f}s = {ev.ratio:.1f}x ema"))
+    tokens_per_step = args.batch * args.seq
+    for step in range(start_step, args.steps):
+        batch = stream.next_batch()
+        batch = {k: jnp.asarray(v, jnp.bfloat16 if k == "ctx" else None)
+                 for k, v in batch.items()}
+        mon.start()
+        params, opt_state, metrics = fn(params, opt_state, batch)
+        metrics = jax.device_get(metrics)
+        dt = mon.stop()
+        if (step + 1) % args.log_every == 0 or step == start_step:
+            print(f"step {step+1:5d} loss={float(metrics['loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.2f} "
+                  f"{dt:.2f}s {mon.tokens_per_sec(tokens_per_step):.0f} tok/s")
+        if args.ckpt_dir and (step + 1) % args.save_every == 0:
+            ckpt.save(args.ckpt_dir, step + 1, (params, opt_state),
+                      data_state=stream.state.as_dict())
+    if args.ckpt_dir:
+        ckpt.save(args.ckpt_dir, args.steps, (params, opt_state),
+                  data_state=stream.state.as_dict())
+    print(f"done: {args.steps} steps, final loss "
+          f"{float(metrics['loss']):.4f}, stragglers={len(mon.events)}")
+    return params
+
+
+if __name__ == "__main__":
+    main()

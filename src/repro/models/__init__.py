@@ -1,0 +1,1 @@
+"""LM substrate: one flexible stack covering all 10 assigned architectures."""

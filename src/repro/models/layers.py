@@ -1,0 +1,213 @@
+"""Shared transformer layers: RMSNorm, RoPE, GQA attention (full / sliding
+window / bidirectional / cross / decode-with-cache), SwiGLU MLP.
+
+Attention is memory-efficient by construction: an online-softmax scan over
+KV chunks (never materializing the full (S, T) score matrix) — required for
+the 32k prefill and 500k decode shapes, and remat-friendly for train_4k.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    # statistics in f32, but never materialize a full f32 copy of x: the
+    # f32 tensor feeds ONLY the mean-reduction (fuses to a small (...,1)
+    # result).  §Perf iteration 1: the f32 copy was XLA-hoisted out of the
+    # backward scan as a full (L, B, S, d) stack — 31.5 GiB/device on
+    # llama3-405b train_4k.
+    var = jnp.mean(jnp.square(x.astype(F32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * w
+
+
+def apply_rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, D), pos: (S,) or (B, S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=F32) / half))
+    if pos.ndim == 1:
+        ang = pos[None, :, None].astype(F32) * freqs[None, None, :]
+    else:
+        ang = pos[..., None].astype(F32) * freqs[None, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+           w_down: jnp.ndarray) -> jnp.ndarray:
+    g = jnp.einsum("bsd,df->bsf", x, w_gate)
+    u = jnp.einsum("bsd,df->bsf", x, w_up)
+    h = jax.nn.silu(g.astype(F32)).astype(x.dtype) * u
+    return jnp.einsum("bsf,fd->bsd", h, w_down)
+
+
+class AttnSpec(NamedTuple):
+    n_heads: int
+    n_kv: int
+    d_head: int
+    causal: bool = True
+    window: Optional[int] = None     # sliding-window size (None = full)
+    qk_norm: bool = False
+    rope_theta: float = 500_000.0
+    kv_chunk: int = 2048
+
+
+def mha_online(q: jnp.ndarray, k, v, *,
+               causal: bool, window: Optional[int], q_offset,
+               valid_len, chunk: int = 1024) -> jnp.ndarray:
+    """Online-softmax attention over KV chunks.
+
+    q: (B, S, H, D); k, v: (B, T, K, D) with H a multiple of K (GQA) —
+    OR (values int8, scales) tuples for a quantized KV cache (MARS's
+    arithmetic conversion applied to serving): chunks are dequantized
+    inside the scan so only int8 + per-token scales stream from HBM.
+    q_offset: scalar position of q[0] (decode: the cache index).
+    valid_len: number of valid KV positions (scalar).
+    Returns (B, S, H, D) in q.dtype; accumulation in f32.
+    """
+    k, k_sc = k if isinstance(k, tuple) else (k, None)
+    v, v_sc = v if isinstance(v, tuple) else (v, None)
+    B, S, H, D = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    chunk = min(chunk, T)
+    n_chunks = -(-T // chunk)
+    Tp = n_chunks * chunk
+    if Tp != T:
+        pad = [(0, 0), (0, Tp - T), (0, 0), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+        if k_sc is not None:
+            k_sc = jnp.pad(k_sc, pad)
+            v_sc = jnp.pad(v_sc, pad)
+    scale = 1.0 / math.sqrt(D)
+    # §Perf iteration 1: keep QK/PV dot OPERANDS in bf16 (MXU-native) with
+    # f32 accumulation via preferred_element_type — halves score-tensor
+    # HBM traffic and restores bf16 matmul peak in the compute term.
+    qg = (q.reshape(B, S, K, G, D).astype(F32) * scale).astype(q.dtype)
+
+    def _chunked(t):
+        return t.reshape(B, n_chunks, chunk, K, -1).transpose(1, 0, 2, 3, 4)
+    kc, vc = _chunked(k), _chunked(v)
+    scs = ((_chunked(k_sc), _chunked(v_sc)) if k_sc is not None
+           else (jnp.zeros((n_chunks,)), jnp.zeros((n_chunks,))))
+    q_pos = q_offset + jnp.arange(S)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kb, vb, t0, ksb, vsb = inp
+        if k_sc is not None:           # dequantize int8 chunk in-register
+            kb = (kb.astype(F32) * ksb.astype(F32)).astype(q.dtype)
+            vb = (vb.astype(F32) * vsb.astype(F32)).astype(q.dtype)
+        s = jnp.einsum("bskgd,btkd->bskgt", qg, kb,
+                       preferred_element_type=F32)
+        k_pos = t0 + jnp.arange(chunk)
+        ok = k_pos[None, :] < valid_len
+        if causal:
+            ok = ok & (q_pos[:, None] >= k_pos[None, :])
+        if window is not None:
+            ok = ok & (q_pos[:, None] - k_pos[None, :] < window)
+        s = jnp.where(ok[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bskgt,btkd->bskgd", p.astype(vb.dtype), vb,
+            preferred_element_type=F32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, S, K, G), NEG_INF, F32)
+    l0 = jnp.zeros((B, S, K, G), F32)
+    a0 = jnp.zeros((B, S, K, G, D), F32)
+    t0s = jnp.arange(n_chunks) * chunk
+    # remat the chunk step: without it the backward pass stacks every
+    # chunk's (B,S,K,G,chunk) f32 probabilities (measured ~1 GiB/layer/dev
+    # on the dry-run) — this is the flash-attention backward trade.
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(step), (m0, l0, a0),
+                                  (kc, vc, t0s, scs[0], scs[1]))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, S, H, D).astype(q.dtype)
+
+
+def attention(x: jnp.ndarray, p: dict, spec: AttnSpec, *,
+              pos: jnp.ndarray, cache: Optional[dict] = None,
+              cache_index=None, ctx_kv: Optional[tuple] = None, mesh=None):
+    """Self- or cross-attention with optional KV cache.
+
+    x: (B, S, d).  p: {'wq','wk','wv','wo'[, 'q_norm','k_norm']}.
+    pos: (S,) absolute positions of x.
+    cache: {'k','v'} (B, T_max, K, D) -> returns updated cache.
+    ctx_kv: (k, v) precomputed cross-attention KV (overrides x-derived kv).
+    """
+    from repro.models.part import constrain
+    B, S, d = x.shape
+    H, K, D = spec.n_heads, spec.n_kv, spec.d_head
+    q = jnp.einsum("bsd,dhx->bshx", x,
+                   p["wq"].reshape(d, H, D))
+    q = constrain(q, mesh, ("dp", None, "tp", None))
+    if ctx_kv is None:
+        k = jnp.einsum("bsd,dhx->bshx", x, p["wk"].reshape(d, K, D))
+        v = jnp.einsum("bsd,dhx->bshx", x, p["wv"].reshape(d, K, D))
+        k = constrain(k, mesh, ("dp", None, "tp", None))
+        v = constrain(v, mesh, ("dp", None, "tp", None))
+    else:
+        k, v = ctx_kv
+    if spec.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        if ctx_kv is None:
+            k = rms_norm(k, p["k_norm"])
+    if ctx_kv is None:
+        q = apply_rope(q, pos, spec.rope_theta)
+        k = apply_rope(k, pos, spec.rope_theta)
+
+    new_cache = cache
+    if ctx_kv is not None:
+        # cross-attention: full-context bidirectional over ctx
+        out = mha_online(q, k, v, causal=False, window=None, q_offset=0,
+                         valid_len=k.shape[1], chunk=spec.kv_chunk)
+    elif cache is None:
+        out = mha_online(q, k, v, causal=spec.causal, window=spec.window,
+                         q_offset=0, valid_len=S, chunk=spec.kv_chunk)
+    elif "k_scale" in cache:
+        # int8 KV cache (MARS arithmetic conversion applied to serving):
+        # per-(token, head) block scales; dequantization happens per chunk
+        # inside the online-softmax scan.
+        from repro.distributed.collectives import quantize_kv_int8
+        kq, ks = quantize_kv_int8(k)
+        vq, vs = quantize_kv_int8(v)
+        upd = lambda buf, val: jax.lax.dynamic_update_slice(
+            buf, val.astype(buf.dtype), (0, cache_index, 0, 0))
+        new_cache = dict(k=upd(cache["k"], kq),
+                         k_scale=upd(cache["k_scale"], ks),
+                         v=upd(cache["v"], vq),
+                         v_scale=upd(cache["v_scale"], vs))
+        out = mha_online(q, (new_cache["k"], new_cache["k_scale"]),
+                         (new_cache["v"], new_cache["v_scale"]),
+                         causal=spec.causal, window=spec.window,
+                         q_offset=cache_index, valid_len=cache_index + S,
+                         chunk=spec.kv_chunk)
+    else:
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, cache_index, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, cache_index, 0, 0))
+        new_cache = dict(k=ck, v=cv)
+        out = mha_online(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                         causal=spec.causal, window=spec.window,
+                         q_offset=cache_index, valid_len=cache_index + S,
+                         chunk=spec.kv_chunk)
+    y = jnp.einsum("bshx,hxd->bsd", out, p["wo"].reshape(H, D, d))
+    return y, new_cache

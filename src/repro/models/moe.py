@@ -1,0 +1,112 @@
+"""Mixture-of-Experts FFN: token-choice top-k routing with static capacity
+(GShard-style dense dispatch) + optional shared expert.
+
+Tokens are processed in small groups (GROUP tokens) so the dispatch/combine
+einsums stay a tiny fraction of expert FLOPs (dispatch cost per token is
+2*E*C*d with C ~= GROUP*top_k*cf/E, i.e. ~GROUP*top_k*cf*2d — a few percent
+of 6*top_k*d*d_ff_expert for GROUP=128).  The expert axis E is sharded over
+the `model` mesh axis: GSPMD turns the dispatch/combine einsums into
+all-to-alls — classic expert parallelism.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+F32 = jnp.float32
+GROUP = 64           # tokens per dispatch group
+CAPACITY_FACTOR = 1.0
+# GROUP/capacity sizing: dispatch+combine are (nG, GROUP, E, C) tensors; at
+# GROUP=128/cf=1.25 the dry-run measured 40 GiB/device temps on
+# qwen3-moe train_4k.  GROUP=64/cf=1.0 keeps the dispatch footprint ~6x
+# smaller at ~2 tokens/expert/group average occupancy (drop-rate trade
+# documented in EXPERIMENTS Perf).
+
+
+def capacity(cfg: ArchConfig, group: int = GROUP) -> int:
+    c = math.ceil(group * cfg.top_k * CAPACITY_FACTOR / cfg.n_experts)
+    return max(4, -(-c // 4) * 4)      # round up to a multiple of 4
+
+
+def moe_ffn(x: jnp.ndarray, p: dict, cfg: ArchConfig,
+            mesh=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d).  p: {'router' (d,E), 'w_gate','w_up' (E,d,f),
+    'w_down' (E,f,d)[, shared expert 'sh_gate','sh_up','sh_down']}.
+
+    Returns (y (B,S,d), aux_loss scalar) — aux is the standard load-balance
+    loss (mean fraction * mean prob * E)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = capacity(cfg)
+    T = B * S
+    Tp = -(-T // GROUP) * GROUP                # pad to a group multiple
+    xf = x.reshape(T, d)
+    if Tp != T:
+        xf = jnp.concatenate(
+            [xf, jnp.zeros((Tp - T, d), x.dtype)], axis=0)
+    nG = Tp // GROUP
+    xg = xf.reshape(nG, GROUP, d)
+    t_valid = (jnp.arange(Tp) < T).reshape(nG, GROUP)     # padded tokens
+
+    logits = jnp.einsum("gtd,de->gte", xg, p["router"]).astype(F32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)          # (nG, T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch): E * mean(fraction_e) * mean(prob_e)
+    top1 = jax.nn.one_hot(gate_idx[..., 0], E, dtype=F32)
+    aux = E * jnp.mean(jnp.mean(top1, axis=(0, 1)) *
+                       jnp.mean(probs, axis=(0, 1)))
+
+    # --- capacity-constrained dispatch/combine masks -----------------------
+    # §Perf iteration (qwen3-moe cell): build every routing tensor with its
+    # expert axis ALREADY sharded over 'model' — without the constraints the
+    # (nG,T,E)/(nG,T,E,C) cumsum/one-hot intermediates are resharded through
+    # EP all-to-alls far larger than the token payload itself.
+    from repro.models.part import constrain
+    dispatch = jnp.zeros((nG, GROUP, E, C), jnp.bfloat16)
+    combine = jnp.zeros((nG, GROUP, E, C), jnp.bfloat16)
+    pos_base = jnp.zeros((nG, 1, E), jnp.int32)
+    for s in range(k):
+        oh = jax.nn.one_hot(gate_idx[..., s], E, dtype=jnp.int32)  # (nG,T,E)
+        oh = constrain(oh, mesh, ("dp", None, "tp"))
+        oh = oh * t_valid[..., None]           # padded tokens route nowhere
+        pos = jnp.cumsum(oh, axis=1) - oh + pos_base               # (nG,T,E)
+        pos_base = pos_base + oh.sum(axis=1, keepdims=True)
+        keep = (pos < C) & (oh > 0)
+        pc = jax.nn.one_hot(pos, C, dtype=jnp.bfloat16) * \
+            keep[..., None].astype(jnp.bfloat16)                   # (nG,T,E,C)
+        pc = constrain(pc, mesh, ("dp", None, "tp", None))
+        dispatch = dispatch + pc
+        combine = combine + pc * gate_vals[..., s][..., None, None].astype(jnp.bfloat16)
+    dispatch = constrain(dispatch, mesh, ("dp", None, "tp", None))
+    combine = constrain(combine, mesh, ("dp", None, "tp", None))
+
+    # --- expert compute (E over 'model' = expert parallelism; the dispatch
+    # einsum becomes the all-to-all under GSPMD) ------------------------------
+    from repro.models.part import constrain
+    xg = constrain(xg, mesh, ("dp", None, None))
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch, xg)                # (nG,E,C,d)
+    xe = constrain(xe, mesh, ("dp", "tp", None, None))
+    h_g = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])
+    h_u = jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+    h = jax.nn.silu(h_g.astype(F32)).astype(xe.dtype) * h_u
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    ye = constrain(ye, mesh, ("dp", "tp", None, None))
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(ye.dtype), ye)
+    y = constrain(y, mesh, ("dp", None, None))
+
+    if cfg.n_shared_experts:
+        g = jnp.einsum("gtd,df->gtf", xg, p["sh_gate"])
+        u = jnp.einsum("gtd,df->gtf", xg, p["sh_up"])
+        sh = jax.nn.silu(g.astype(F32)).astype(xg.dtype) * u
+        y = y + jnp.einsum("gtf,fd->gtd", sh, p["sh_down"])
+
+    y = y.reshape(Tp, d)[:T]
+    return y.reshape(B, S, d), aux

@@ -1,0 +1,165 @@
+"""Mamba-2 SSD (state-space duality) block — chunked matmul form.
+
+The SSD recurrence  h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t^T,
+y_t = C_t h_t + D x_t  (scalar A per head) is evaluated chunk-wise
+(arXiv:2405.21060 Alg. 1): within a chunk the quadratic "attention-like"
+matmul form runs on the MXU; across chunks a small state (B,H,N,P) is
+carried by a scan — O(S) total, MXU-dominated.
+
+TPU note: this shares its core building block (decay-masked segment
+reduction) with MARS's event detection — both are segmented scans evaluated
+as matmuls; see DESIGN.md Arch-applicability.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+F32 = jnp.float32
+CHUNK = 512
+
+
+def _split_proj(zxbcdt: jnp.ndarray, cfg: ArchConfig):
+    d_in = cfg.d_inner
+    H, N = cfg.n_ssm_heads, cfg.ssm_state
+    z, xs, B_, C_, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1)
+    return z, xs, B_, C_, dt  # dt: (..., H)
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv, width W.  x: (B,S,d), w: (W,d).
+    With `state` (B,W-1,d): single-step decode, returns (y, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+        y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(W))
+        return jax.nn.silu(y.astype(F32)).astype(x.dtype), None
+    full = jnp.concatenate([state, x], axis=1)            # (B, W, d)
+    y = sum(full[:, i:i + 1, :] * w[i] for i in range(W))
+    return (jax.nn.silu(y.astype(F32)).astype(x.dtype),
+            full[:, 1:, :].astype(state.dtype))
+
+
+def ssd_chunked(xh: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                B_: jnp.ndarray, C_: jnp.ndarray,
+                state0: Optional[jnp.ndarray] = None):
+    """Chunked SSD scan.
+
+    xh: (B,S,H,P), dt: (B,S,H) (post-softplus), A: (H,) negative,
+    B_, C_: (B,S,N) (single group).  Returns (y (B,S,H,P), state (B,H,N,P)).
+    """
+    Bb, S, H, P = xh.shape
+    N = B_.shape[-1]
+    Q = min(CHUNK, S)
+    nc = S // Q
+    assert nc * Q == S, (S, Q)
+
+    dA = dt * A[None, None, :]                       # (B,S,H) <= 0
+    x_dt = xh * dt[..., None]                        # dt-weighted input
+    # reshape into chunks: (nc, B, Q, ...)
+    def ck(t):
+        return t.reshape(Bb, nc, Q, *t.shape[2:]).transpose(
+            1, 0, 2, *range(3, t.ndim + 1))
+    dA_c, x_c, B_c, C_c = ck(dA), ck(x_dt), ck(B_), ck(C_)
+
+    cum = jnp.cumsum(dA_c, axis=2)                   # (nc,B,Q,H)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (nc,B,Qi,Qj,H)
+    iq = jnp.arange(Q)
+    causal = (iq[:, None] >= iq[None, :])[None, None, :, :, None]
+    # §Perf iteration (mamba2 cell): decay mask in bf16 — it multiplies
+    # bf16 operands of an MXU dot; keeping it f32 doubled the dominant
+    # (nc,B,Q,Q,H) HBM traffic of the memory-bound train_4k cell.
+    L = jnp.where(causal, jnp.exp(seg), 0.0).astype(jnp.bfloat16)
+
+    # intra-chunk: y_intra[i] = sum_j (C_i . B_j) L_ij x_dt[j]
+    G = jnp.einsum("cbin,cbjn->cbij", C_c, B_c,
+                   preferred_element_type=F32).astype(jnp.bfloat16)
+    M = G[..., None] * L                             # (nc,B,Qi,Qj,H) bf16
+    y_intra = jnp.einsum("cbijh,cbjhp->cbihp", M, x_c.astype(jnp.bfloat16),
+                         preferred_element_type=F32)
+
+    # inter-chunk: carried state
+    decay_out = jnp.exp(cum)                         # (nc,B,Q,H)
+    decay_last = jnp.exp(cum[:, :, -1:, :] - cum)    # exp(cum_Q - cum_j)
+    if state0 is None:
+        state0 = jnp.zeros((Bb, H, N, P), F32)
+
+    def step(state, inp):
+        dA_l, x_l, B_l, C_l, d_out, d_last = inp
+        # y_inter[i] = C_i . state * exp(cum_i)
+        y_int = jnp.einsum("bin,bhnp->bihp", C_l.astype(F32), state) \
+            * d_out[..., None]
+        chunk_decay = jnp.exp(dA_l.sum(axis=1))      # (B,H)
+        upd = jnp.einsum("bjn,bjhp->bhnp", B_l.astype(F32),
+                         x_l.astype(F32) * d_last[..., None])
+        state = state * chunk_decay[:, :, None, None] + upd
+        return state, y_int
+
+    state, y_inter = jax.lax.scan(
+        step, state0.astype(F32), (dA_c, x_c, B_c, C_c, decay_out, decay_last))
+    y = y_intra + y_inter                            # (nc,B,Q,H,P)
+    y = y.transpose(1, 0, 2, 3, 4).reshape(Bb, S, H, P)
+    return y.astype(xh.dtype), state
+
+
+def ssd_block(x: jnp.ndarray, p: dict, cfg: ArchConfig,
+              cache: Optional[dict] = None, mesh=None):
+    """Full Mamba-2 block.  x: (B,S,d).
+
+    p: {'in_proj' (d, 2*d_in+2N+H), 'conv_w' (W, d_in), 'A_log' (H,),
+        'D' (H,), 'dt_bias' (H,), 'gate_norm' (d_in,), 'out_proj' (d_in,d)}.
+    cache: {'conv' (B,W-1,d_in), 'state' (B,H,N,P)} for decode.
+    """
+    from repro.models.part import constrain
+    Bb, S, d = x.shape
+    H, N, P = cfg.n_ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    zxbcdt = constrain(zxbcdt, mesh, ("dp", None, None))
+    z, xs, B_, C_, dt_raw = _split_proj(zxbcdt, cfg)
+    dt = jax.nn.softplus(dt_raw.astype(F32) + p["dt_bias"].astype(F32))
+    A = -jnp.exp(p["A_log"].astype(F32))
+
+    new_cache = cache
+    if cache is None:
+        xc, _ = _causal_conv(xs, p["conv_w"])
+        xh = xc.reshape(Bb, S, H, P)
+        y, _ = ssd_chunked(xh, dt, A, B_, C_)
+        y = y.astype(F32)
+    elif S > 1:
+        # prefill: run the chunked scan from the empty state, then stash the
+        # final SSD state and the conv tail into the cache.
+        W = p["conv_w"].shape[0]
+        xc, _ = _causal_conv(xs, p["conv_w"])
+        xh = xc.reshape(Bb, S, H, P)
+        y, state = ssd_chunked(xh, dt, A, B_, C_)
+        y = y.astype(F32)
+        conv_state = xs[:, S - (W - 1):, :].astype(cache["conv"].dtype)
+        new_cache = dict(conv=conv_state,
+                         state=state.astype(cache["state"].dtype))
+    else:
+        xc, conv_state = _causal_conv(xs, p["conv_w"], cache["conv"])
+        xh = xc.reshape(Bb, S, H, P)
+        # single-step recurrence (S == 1 in decode)
+        decay = jnp.exp(dt * A[None, None, :])[:, 0]          # (B,H)
+        upd = jnp.einsum("bn,bhp->bhnp", B_[:, 0].astype(F32),
+                         xh[:, 0].astype(F32) * dt[:, 0, :, None])
+        state = cache["state"].astype(F32) * decay[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", C_[:, 0].astype(F32), state)[:, None]
+        new_cache = dict(conv=conv_state,
+                         state=state.astype(cache["state"].dtype))
+
+    # D skip connection on the (conv'd) input heads
+    y = y + xh.astype(F32) * p["D"].astype(F32)[None, None, :, None]
+    y = y.reshape(Bb, S, H * P).astype(x.dtype)
+    # gated RMSNorm (Mamba-2): norm(y * silu(z))
+    from repro.models.layers import rms_norm
+    y = rms_norm(y * jax.nn.silu(z.astype(F32)).astype(x.dtype),
+                 p["gate_norm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, new_cache

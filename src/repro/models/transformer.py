@@ -1,0 +1,405 @@
+"""Unified decoder stack for all assigned architectures.
+
+Layers are organized in GROUPS so heterogeneous stacks scan cleanly:
+the layer pattern (e.g. Llama-4's [dense, moe], Llama-3.2-Vision's
+[self x4, cross]) repeats n_layers/len(pattern) times; parameters are
+stacked per pattern slot and the stack runs as one lax.scan over groups
+(compact HLO, fast compiles, remat per group).
+
+Families:
+    dense   — pre-norm GQA attention + SwiGLU (SWA / qk-norm variants)
+    moe     — attention + routed experts (moe.py), optional dense interleave
+    hybrid  — Hymba: parallel attention & SSM branches + SwiGLU
+    vlm     — decoder with cross-attention layers every k-th layer
+    audio   — Whisper: bidirectional encoder + causal decoder w/ cross-attn
+    ssm     — Mamba-2 (SSD), attention-free
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import AttnSpec, attention, rms_norm, swiglu
+from repro.models.part import constrain
+
+F32 = jnp.float32
+BF16 = jnp.bfloat16
+
+
+# --------------------------------------------------------------------------- #
+# Layer patterns
+# --------------------------------------------------------------------------- #
+def layer_pattern(cfg: ArchConfig) -> Tuple[str, ...]:
+    if cfg.family == "dense":
+        return ("self",)
+    if cfg.family == "moe":
+        if cfg.moe_every == 2:
+            return ("self", "self_moe")
+        return ("self_moe",)
+    if cfg.family == "hybrid":
+        return ("hybrid",)
+    if cfg.family == "vlm":
+        k = cfg.cross_attn_every
+        return tuple(["self"] * (k - 1) + ["cross"])
+    if cfg.family == "audio":
+        return ("dec",)
+    if cfg.family == "ssm":
+        return ("ssd",)
+    raise ValueError(cfg.family)
+
+
+def n_groups(cfg: ArchConfig) -> int:
+    p = layer_pattern(cfg)
+    assert cfg.n_layers % len(p) == 0, (cfg.name, cfg.n_layers, p)
+    return cfg.n_layers // len(p)
+
+
+def attn_spec(cfg: ArchConfig, *, causal=True, window=None) -> AttnSpec:
+    return AttnSpec(n_heads=cfg.n_heads, n_kv=cfg.n_kv, d_head=cfg.d_head,
+                    causal=causal, window=window, qk_norm=cfg.qk_norm,
+                    rope_theta=cfg.rope_theta)
+
+
+# --------------------------------------------------------------------------- #
+# Parameter init (pure; run under jax.eval_shape for the dry-run)
+# --------------------------------------------------------------------------- #
+def _lin(rng, shape, scale, dtype=BF16):
+    return (jax.random.normal(rng, shape, F32) * scale).astype(dtype)
+
+
+def _init_attn(rng, cfg: ArchConfig, G: int, cross=False) -> Dict:
+    d, H, K, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.d_head
+    ks = jax.random.split(rng, 6)
+    s_in = 0.02
+    s_out = 0.02 / (2 * cfg.n_layers) ** 0.5
+    p = dict(
+        wq=_lin(ks[0], (G, d, H * Dh), s_in),
+        wk=_lin(ks[1], (G, d, K * Dh), s_in),
+        wv=_lin(ks[2], (G, d, K * Dh), s_in),
+        wo=_lin(ks[3], (G, H * Dh, d), s_out),
+    )
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.ones((G, Dh), BF16)
+        p["k_norm"] = jnp.ones((G, Dh), BF16)
+    return p
+
+
+def _init_mlp(rng, cfg: ArchConfig, G: int, d_ff: int) -> Dict:
+    d = cfg.d_model
+    ks = jax.random.split(rng, 3)
+    s_in = 0.02
+    s_out = 0.02 / (2 * cfg.n_layers) ** 0.5
+    return dict(w_gate=_lin(ks[0], (G, d, d_ff), s_in),
+                w_up=_lin(ks[1], (G, d, d_ff), s_in),
+                w_down=_lin(ks[2], (G, d_ff, d), s_out))
+
+
+def _init_moe(rng, cfg: ArchConfig, G: int) -> Dict:
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    ks = jax.random.split(rng, 7)
+    s_in, s_out = 0.02, 0.02 / (2 * cfg.n_layers) ** 0.5
+    p = dict(router=_lin(ks[0], (G, d, E), s_in, F32),
+             w_gate=_lin(ks[1], (G, E, d, f), s_in),
+             w_up=_lin(ks[2], (G, E, d, f), s_in),
+             w_down=_lin(ks[3], (G, E, f, d), s_out))
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        p.update(sh_gate=_lin(ks[4], (G, d, fs), s_in),
+                 sh_up=_lin(ks[5], (G, d, fs), s_in),
+                 sh_down=_lin(ks[6], (G, fs, d), s_out))
+    return p
+
+
+def _init_ssm(rng, cfg: ArchConfig, G: int) -> Dict:
+    d, d_in = cfg.d_model, cfg.d_inner
+    H, N, W = cfg.n_ssm_heads, cfg.ssm_state, cfg.ssm_conv
+    e = 2 * d_in + 2 * N + H
+    ks = jax.random.split(rng, 4)
+    s_in, s_out = 0.02, 0.02 / (2 * cfg.n_layers) ** 0.5
+    return dict(
+        in_proj=_lin(ks[0], (G, d, e), s_in),
+        conv_w=_lin(ks[1], (G, W, d_in), 0.2),
+        A_log=jnp.zeros((G, H), F32),
+        D=jnp.ones((G, H), F32),
+        dt_bias=jnp.zeros((G, H), F32),
+        gate_norm=jnp.ones((G, d_in), BF16),
+        out_proj=_lin(ks[2], (G, d_in, d), s_out),
+    )
+
+
+def _init_block(rng, cfg: ArchConfig, kind: str, G: int) -> Dict:
+    d = cfg.d_model
+    ks = jax.random.split(rng, 4)
+    ones = lambda: jnp.ones((G, d), BF16)
+    if kind == "self":
+        return dict(ln1=ones(), attn=_init_attn(ks[0], cfg, G),
+                    ln2=ones(), mlp=_init_mlp(ks[1], cfg, G, cfg.d_ff))
+    if kind == "self_moe":
+        return dict(ln1=ones(), attn=_init_attn(ks[0], cfg, G),
+                    ln2=ones(), moe=_init_moe(ks[1], cfg, G))
+    if kind == "cross":
+        return dict(ln1=ones(), xattn=_init_attn(ks[0], cfg, G, cross=True),
+                    ln2=ones(), mlp=_init_mlp(ks[1], cfg, G, cfg.d_ff))
+    if kind == "hybrid":
+        return dict(ln1=ones(), attn=_init_attn(ks[0], cfg, G),
+                    ssm=_init_ssm(ks[1], cfg, G),
+                    norm_attn=ones(), norm_ssm=ones(),
+                    ln2=ones(), mlp=_init_mlp(ks[2], cfg, G, cfg.d_ff))
+    if kind == "dec":
+        return dict(ln1=ones(), attn=_init_attn(ks[0], cfg, G),
+                    ln_x=ones(), xattn=_init_attn(ks[1], cfg, G, cross=True),
+                    ln2=ones(), mlp=_init_mlp(ks[2], cfg, G, cfg.d_ff))
+    if kind == "enc":
+        return dict(ln1=ones(), attn=_init_attn(ks[0], cfg, G),
+                    ln2=ones(), mlp=_init_mlp(ks[1], cfg, G, cfg.d_ff))
+    if kind == "ssd":
+        return dict(ln1=ones(), ssm=_init_ssm(ks[0], cfg, G))
+    raise ValueError(kind)
+
+
+def init_params(cfg: ArchConfig, rng) -> Dict:
+    pattern = layer_pattern(cfg)
+    G = n_groups(cfg)
+    ks = jax.random.split(rng, len(pattern) + 4)
+    params: Dict = dict(
+        embed=_lin(ks[0], (cfg.vocab, cfg.d_model), 0.02),
+        final_norm=jnp.ones((cfg.d_model,), BF16),
+        blocks={f"slot{j}": _init_block(ks[j + 1], cfg, kind, G)
+                for j, kind in enumerate(pattern)},
+    )
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _lin(ks[len(pattern) + 1],
+                                 (cfg.d_model, cfg.vocab), 0.02)
+    if cfg.family == "audio":
+        Ge = cfg.n_enc_layers
+        params["enc_blocks"] = {"slot0": _init_block(
+            ks[len(pattern) + 2], cfg.replace(n_layers=Ge), "enc", Ge)}
+        params["enc_final_norm"] = jnp.ones((cfg.d_model,), BF16)
+        params["enc_pos"] = _lin(ks[len(pattern) + 3],
+                                 (cfg.n_ctx_tokens, cfg.d_model), 0.02)
+    return params
+
+
+# --------------------------------------------------------------------------- #
+# Block application
+# --------------------------------------------------------------------------- #
+def _apply_block(x, bp, kind: str, cfg: ArchConfig, *, pos, is_global=None,
+                 cache=None, cache_index=None, ctx=None, mesh=None):
+    """One layer.  Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), F32)
+    new_cache = cache
+    # Megatron-style sequence parallelism on the residual stream: tokens
+    # sharded over BOTH dp and 'model' between blocks (the scan-carried
+    # residuals are what remat saves per layer — measured 36 GiB/device
+    # without SP on qwen3-moe train_4k).  Attention/MLP internally
+    # re-gather S and shard heads/hidden instead (TP).
+    x = constrain(x, mesh, ("dp", "tp", None))
+
+    if kind == "ssd":
+        h, new_cache = ssm_lib.ssd_block(rms_norm(x, bp["ln1"]), bp["ssm"],
+                                         cfg, cache, mesh=mesh)
+        return x + constrain(h, mesh, ("dp", "tp", None)), new_cache, aux
+
+    if kind == "hybrid":
+        xin = rms_norm(x, bp["ln1"])
+        window = jnp.where(is_global, jnp.int32(1 << 30),
+                           jnp.int32(cfg.swa_window))
+        spec = attn_spec(cfg, window=None)  # window applied via valid mask
+        a_cache = None if cache is None else cache.get("attn")
+        s_cache = None if cache is None else cache.get("ssm")
+        # dynamic window: pass the per-layer window as a traced bound
+        a_out, a_cache = _windowed_attention(xin, bp["attn"], spec, window,
+                                             pos, a_cache, cache_index,
+                                             mesh=mesh)
+        s_out, s_cache = ssm_lib.ssd_block(xin, bp["ssm"], cfg, s_cache,
+                                           mesh=mesh)
+        h = 0.5 * (rms_norm(a_out, bp["norm_attn"]) +
+                   rms_norm(s_out, bp["norm_ssm"]))
+        x = x + h.astype(x.dtype)
+        x = x + swiglu(rms_norm(x, bp["ln2"]), **bp["mlp"])
+        if cache is not None:
+            new_cache = dict(attn=a_cache, ssm=s_cache)
+        return x, new_cache, aux
+
+    # attention part (self / cross / dec)
+    if kind in ("self", "self_moe", "enc"):
+        spec = attn_spec(cfg, causal=kind != "enc", window=cfg.swa_window)
+        h, new_cache = attention(rms_norm(x, bp["ln1"]), bp["attn"], spec,
+                                 pos=pos, cache=cache,
+                                 cache_index=cache_index, mesh=mesh)
+        x = x + constrain(h, mesh, ("dp", "tp", None))
+    elif kind == "cross":
+        spec = attn_spec(cfg, causal=False)
+        kx = jnp.einsum("btd,dhx->bthx", ctx, bp["xattn"]["wk"].reshape(
+            cfg.d_model, cfg.n_kv, cfg.d_head))
+        vx = jnp.einsum("btd,dhx->bthx", ctx, bp["xattn"]["wv"].reshape(
+            cfg.d_model, cfg.n_kv, cfg.d_head))
+        h, _ = attention(rms_norm(x, bp["ln1"]), bp["xattn"], spec, pos=pos,
+                         ctx_kv=(kx, vx), mesh=mesh)
+        x = x + constrain(h, mesh, ("dp", "tp", None))
+    elif kind == "dec":
+        spec = attn_spec(cfg, causal=True)
+        h, new_cache = attention(rms_norm(x, bp["ln1"]), bp["attn"], spec,
+                                 pos=pos, cache=cache,
+                                 cache_index=cache_index, mesh=mesh)
+        x = x + constrain(h, mesh, ("dp", "tp", None))
+        kx = jnp.einsum("btd,dhx->bthx", ctx, bp["xattn"]["wk"].reshape(
+            cfg.d_model, cfg.n_kv, cfg.d_head))
+        vx = jnp.einsum("btd,dhx->bthx", ctx, bp["xattn"]["wv"].reshape(
+            cfg.d_model, cfg.n_kv, cfg.d_head))
+        hx, _ = attention(rms_norm(x, bp["ln_x"]), bp["xattn"],
+                          attn_spec(cfg, causal=False), pos=pos,
+                          ctx_kv=(kx, vx), mesh=mesh)
+        x = x + constrain(hx, mesh, ("dp", "tp", None))
+    else:
+        raise ValueError(kind)
+
+    # FFN part
+    if kind == "self_moe":
+        h, aux = moe_lib.moe_ffn(rms_norm(x, bp["ln2"]), bp["moe"], cfg,
+                                 mesh=mesh)
+        x = x + constrain(h, mesh, ("dp", "tp", None))
+    else:
+        h = swiglu(rms_norm(x, bp["ln2"]), **bp["mlp"])
+        x = x + constrain(h, mesh, ("dp", "tp", None))
+    return x, new_cache, aux
+
+
+def _windowed_attention(x, p, spec: AttnSpec, window, pos, cache,
+                        cache_index, mesh=None):
+    """Attention with a *traced* per-layer window bound (hybrid stacks mix
+    SWA and global layers inside one scan).  Implemented by passing the
+    window as a dynamic clip on key positions inside the online-softmax."""
+    from repro.models import layers as L
+    B, S, d = x.shape
+    H, K, D = spec.n_heads, spec.n_kv, spec.d_head
+    q = jnp.einsum("bsd,dhx->bshx", x, p["wq"].reshape(d, H, D))
+    k = jnp.einsum("bsd,dhx->bshx", x, p["wk"].reshape(d, K, D))
+    v = jnp.einsum("bsd,dhx->bshx", x, p["wv"].reshape(d, K, D))
+    q = constrain(q, mesh, ("dp", None, "tp", None))
+    k = constrain(k, mesh, ("dp", None, "tp", None))
+    v = constrain(v, mesh, ("dp", None, "tp", None))
+    q = L.apply_rope(q, pos, spec.rope_theta)
+    k = L.apply_rope(k, pos, spec.rope_theta)
+    new_cache = cache
+    if cache is None:
+        out = _mha_dyn_window(q, k, v, window, q_offset=0, valid_len=S,
+                              chunk=spec.kv_chunk)
+    else:
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, cache_index, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, cache_index, 0, 0))
+        new_cache = dict(k=ck, v=cv)
+        out = _mha_dyn_window(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                              window, q_offset=cache_index,
+                              valid_len=cache_index + S, chunk=spec.kv_chunk)
+    y = jnp.einsum("bshx,hxd->bsd", out, p["wo"].reshape(H, D, d))
+    return y, new_cache
+
+
+def _mha_dyn_window(q, k, v, window, *, q_offset, valid_len, chunk):
+    """mha_online with a traced (dynamic) window size."""
+    from repro.models.layers import NEG_INF
+    import math as _m
+    B, S, H, D = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    chunk = min(chunk, T)
+    n_chunks = -(-T // chunk)
+    Tp = n_chunks * chunk
+    if Tp != T:
+        pad = [(0, 0), (0, Tp - T), (0, 0), (0, 0)]
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    scale = 1.0 / _m.sqrt(D)
+    qg = (q.reshape(B, S, K, G, D).astype(F32) * scale).astype(q.dtype)
+    kc = k.reshape(B, n_chunks, chunk, K, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, K, D).transpose(1, 0, 2, 3, 4)
+    q_pos = q_offset + jnp.arange(S)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kb, vb, t0 = inp
+        s = jnp.einsum("bskgd,btkd->bskgt", qg, kb,
+                       preferred_element_type=F32)
+        k_pos = t0 + jnp.arange(chunk)
+        ok = (k_pos[None, :] < valid_len) & \
+             (q_pos[:, None] >= k_pos[None, :]) & \
+             (q_pos[:, None] - k_pos[None, :] < window)
+        s = jnp.where(ok[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bskgt,btkd->bskgd", p.astype(vb.dtype), vb,
+            preferred_element_type=F32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, S, K, G), NEG_INF, F32)
+    l0 = jnp.zeros((B, S, K, G), F32)
+    a0 = jnp.zeros((B, S, K, G, D), F32)
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(step), (m0, l0, a0),
+                                  (kc, vc, jnp.arange(n_chunks) * chunk))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, S, H, D).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Stack forward (scan over groups)
+# --------------------------------------------------------------------------- #
+def _group_extras(cfg: ArchConfig):
+    """Per-group scanned extras (e.g. hybrid global-layer flags)."""
+    pattern = layer_pattern(cfg)
+    G = n_groups(cfg)
+    if cfg.family == "hybrid":
+        flags = jnp.zeros((G, len(pattern)), bool)
+        for g in cfg.global_layers:
+            gi, si = divmod(g, len(pattern))
+            flags = flags.at[gi, si].set(True)
+        return dict(is_global=flags)
+    return {}
+
+
+def run_stack(blocks: Dict, x, cfg: ArchConfig, *, pos, cache=None,
+              cache_index=None, ctx=None, remat=True,
+              blocks_key="blocks", mesh=None):
+    """Scan the layer groups.  Returns (x, new_cache, aux_sum)."""
+    pattern = (("enc",) if blocks_key == "enc_blocks"
+               else layer_pattern(cfg))
+    extras = _group_extras(cfg) if blocks_key == "blocks" else {}
+
+    def group_fn(carry, scanned):
+        x, aux = carry
+        gp = scanned["params"]
+        gc = scanned.get("cache")
+        new_gc = {} if gc is not None else None
+        for j, kind in enumerate(pattern):
+            slot = f"slot{j}"
+            c_j = None if gc is None else gc.get(slot)
+            ig = scanned["extras"]["is_global"][j] if extras else None
+            x, c_out, a = _apply_block(
+                x, gp[slot], kind, cfg, pos=pos, is_global=ig, cache=c_j,
+                cache_index=cache_index, ctx=ctx, mesh=mesh)
+            if new_gc is not None:
+                new_gc[slot] = c_out if c_out is not None else {}
+            aux = aux + a
+        out = {"cache": new_gc} if new_gc is not None else {}
+        return (x, aux), out
+
+    fn = jax.checkpoint(group_fn) if remat else group_fn
+    scanned = {"params": blocks, "extras": extras} if extras else \
+        {"params": blocks}
+    if not extras:
+        scanned["extras"] = {}
+    if cache is not None:
+        scanned["cache"] = cache
+    (x, aux), ys = jax.lax.scan(fn, (x, jnp.zeros((), F32)), scanned)
+    new_cache = ys.get("cache") if isinstance(ys, dict) else None
+    return x, new_cache, aux

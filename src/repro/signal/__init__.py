@@ -1,0 +1,1 @@
+"""Raw-signal data substrate: simulation, datasets, streaming reader."""

@@ -1,0 +1,44 @@
+"""bitonic_sort kernel vs oracle: shape sweeps + property test."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.bitonic_sort import ops, ref
+
+
+@pytest.mark.parametrize("b,l", [(1, 128), (4, 100), (2, 1000), (3, 4096),
+                                 (1, 7), (8, 129), (1, 8192)])
+def test_sort_sweep(b, l):
+    rng = np.random.default_rng(b * 100 + l)
+    keys = rng.integers(-2**30, 2**31 - 2, size=(b, l)).astype(np.int32)
+    out = ops.sort_batch(jnp.asarray(keys))
+    exp = ref.sort_ref(jnp.asarray(keys))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+def test_sort_vmap():
+    rng = np.random.default_rng(9)
+    keys = rng.integers(0, 2**31 - 2, size=(5, 512)).astype(np.int32)
+    out = jax.vmap(ops.sort1d)(jnp.asarray(keys))
+    exp = ref.sort_ref(jnp.asarray(keys))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(-2**31, 2**31 - 2), min_size=1, max_size=300))
+def test_sort_is_ordered_permutation(xs):
+    keys = jnp.asarray(np.array(xs, np.int32))
+    out = np.asarray(ops.sort1d(keys))
+    assert (np.diff(out.astype(np.int64)) >= 0).all()
+    assert sorted(xs) == out.tolist()
+
+
+def test_duplicates_and_sentinels():
+    keys = jnp.asarray(np.array([5, 5, 5, 0x7FFFFFFF, -1, 0x7FFFFFFF, 5],
+                                np.int32))
+    out = np.asarray(ops.sort1d(keys))
+    exp = np.sort(np.asarray(keys))
+    np.testing.assert_array_equal(out, exp)

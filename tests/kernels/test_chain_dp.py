@@ -1,0 +1,50 @@
+"""chain_dp kernel vs the core pipeline's scan implementation."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.config import MarsConfig
+from repro.kernels.chain_dp import ops, ref
+
+
+def _anchors(rng, R, A, t_range=4000, q_range=180, p_valid=0.8):
+    t = np.sort(rng.integers(0, t_range, size=(R, A))).astype(np.int32)
+    q = rng.integers(0, q_range, size=(R, A)).astype(np.int32)
+    order = np.lexsort((q, t), axis=-1)
+    t = np.take_along_axis(t, order, -1)
+    q = np.take_along_axis(q, order, -1)
+    v = rng.random((R, A)) < p_valid
+    return jnp.asarray(q), jnp.asarray(t), jnp.asarray(v)
+
+
+@pytest.mark.parametrize("R,A,B", [(2, 64, 8), (4, 128, 16), (1, 512, 32),
+                                   (3, 256, 64)])
+def test_chain_dp_sweep(R, A, B):
+    cfg = MarsConfig(max_anchors=A, chain_band=B)
+    q, t, v = _anchors(np.random.default_rng(R * A + B), R, A)
+    f_k, d_k = ops.chain_dp(q, t, v, cfg)
+    f_r, d_r = ref.chain_dp_ref(q, t, v, cfg)
+    np.testing.assert_allclose(np.asarray(f_k), np.asarray(f_r), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(d_k), np.asarray(d_r))
+
+
+def test_chain_dp_colinear_run_scores():
+    """A perfectly colinear run of anchors should chain to ~run length."""
+    cfg = MarsConfig(max_anchors=64, chain_band=16)
+    A = 64
+    t = (np.arange(A) * 3).astype(np.int32)     # dt == dq == 3: no gap cost
+    q = (np.arange(A) * 3).astype(np.int32)
+    v = np.ones(A, bool)
+    f_k, _ = ops.chain_dp(jnp.asarray(q)[None], jnp.asarray(t)[None],
+                          jnp.asarray(v)[None], cfg)
+    expected_last = cfg.anchor_score * A - (A - 1) * cfg.skip_cost * 3
+    assert abs(float(f_k[0, -1]) - expected_last) < 1e-3
+
+
+def test_chain_dp_all_invalid():
+    cfg = MarsConfig(max_anchors=32, chain_band=8)
+    q, t, v = _anchors(np.random.default_rng(0), 1, 32, p_valid=0.0)
+    f_k, d_k = ops.chain_dp(q, t, v, cfg)
+    f_r, d_r = ref.chain_dp_ref(q, t, v, cfg)
+    np.testing.assert_allclose(np.asarray(f_k), np.asarray(f_r), rtol=1e-6)
+    assert (np.asarray(f_k) < -1e8).all()

@@ -1,0 +1,41 @@
+"""pluto_lookup kernel vs pure-jnp oracle: shape/dtype sweeps."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.pluto_lookup import ops
+from repro.kernels.pluto_lookup import ref
+
+
+@pytest.mark.parametrize("n,q", [(16, 5), (100, 37), (512, 256),
+                                 (1000, 513), (2048, 64), (4096, 1)])
+def test_lookup_int32_sweep(n, q):
+    rng = np.random.default_rng(n * 1000 + q)
+    table = rng.integers(-2**31, 2**31, size=n, dtype=np.int64).astype(np.int32)
+    idx = rng.integers(0, n, size=q).astype(np.int32)
+    out = ops.lookup(jnp.asarray(table), jnp.asarray(idx))
+    exp = ref.lookup_ref(jnp.asarray(table), jnp.asarray(idx))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+@pytest.mark.parametrize("dtype", [np.int32, np.uint32, np.int16])
+def test_lookup_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    info = np.iinfo(dtype)
+    table = rng.integers(info.min, int(info.max) + 1, size=300,
+                         dtype=np.int64).astype(dtype)
+    idx = rng.integers(0, 300, size=77).astype(np.int32)
+    out = ops.lookup(jnp.asarray(table), jnp.asarray(idx))
+    exp = ref.lookup_ref(jnp.asarray(table), jnp.asarray(idx))
+    assert out.dtype == exp.dtype
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+def test_lookup_2d_indices_and_clip():
+    rng = np.random.default_rng(1)
+    table = rng.integers(0, 1000, size=50).astype(np.int32)
+    idx = rng.integers(-10, 90, size=(4, 33)).astype(np.int32)  # out of range
+    out = ops.lookup(jnp.asarray(table), jnp.asarray(idx))
+    exp = ref.lookup_ref(jnp.asarray(table), jnp.asarray(idx))
+    assert out.shape == (4, 33)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))

@@ -1,0 +1,54 @@
+"""Paper Table 3 analogue: accuracy claims validated end-to-end.
+
+Claims under test (Section 8.1):
+  1. fixed-point arithmetic only minimally decreases accuracy vs float;
+  2. MARS filters + early quantization give F1 >= the unfiltered
+     RawHash-like baseline (and clearly better precision under junk);
+  3. accuracy is 'on par' overall (absolute F1 high on small genomes).
+"""
+import numpy as np
+import pytest
+
+from repro.core import MarsConfig, Mapper, build_index, score_accuracy
+from repro.signal import simulate
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ref = simulate.make_reference(200_000, seed=21)
+    base = MarsConfig()
+    reads = simulate.sample_reads(ref, 64, signal_len=base.signal_len,
+                                  seed=22, junk_frac=0.125)
+    out = {}
+    for name, cfg in {
+        "nofilter": base.replace(use_freq_filter=False,
+                                 use_vote_filter=False,
+                                 early_quantization=False,
+                                 fixed_point=False),
+        "rh2": base.with_mode("rh2"),
+        "ms_float": base.with_mode("ms_float"),
+        "ms_fixed": base.with_mode("ms_fixed"),
+    }.items():
+        idx = build_index(ref.events_concat, ref.n_events, cfg)
+        o = Mapper(idx, cfg).map_signals(reads.signals)
+        out[name] = score_accuracy(o, reads.true_pos, reads.true_strand,
+                                   reads.mappable, reads.n_bases,
+                                   ref.n_events)
+    return out
+
+
+def test_fixed_point_minimal_loss(setup):
+    assert setup["ms_fixed"]["f1"] >= setup["ms_float"]["f1"] - 0.05
+
+
+def test_filters_beat_unfiltered_baseline(setup):
+    assert setup["ms_fixed"]["f1"] >= setup["nofilter"]["f1"]
+
+
+def test_absolute_accuracy(setup):
+    assert setup["ms_fixed"]["f1"] >= 0.85
+    assert setup["ms_fixed"]["precision"] >= 0.9
+
+
+def test_on_par_with_rh2(setup):
+    assert setup["ms_fixed"]["f1"] >= setup["rh2"]["f1"] - 0.03

@@ -1,0 +1,59 @@
+"""Config registry + roofline math unit tests."""
+import pytest
+
+from repro.analysis import roofline as rl
+from repro.configs import ARCHS, SHAPES, SHAPE_ORDER, cell_applicable, get_config
+
+
+def test_ten_archs_assigned():
+    assert len(ARCHS) == 10
+    assert set(SHAPE_ORDER) == set(SHAPES)
+
+
+def test_cell_applicability_matrix():
+    """40 cells total; long_500k runs only for sub-quadratic archs."""
+    cells = [(a, s) for a in ARCHS for s in SHAPE_ORDER]
+    assert len(cells) == 40
+    runnable = [(a, s) for a, s in cells
+                if cell_applicable(get_config(a), SHAPES[s])[0]]
+    skipped = [(a, s) for a, s in cells
+               if not cell_applicable(get_config(a), SHAPES[s])[0]]
+    assert all(s == "long_500k" for _, s in skipped)
+    long_ok = {a for a, s in runnable if s == "long_500k"}
+    assert long_ok == {"h2o-danube-1.8b", "hymba-1.5b", "mamba2-780m"}
+    assert len(skipped) == 7
+
+
+def test_reduced_configs_stay_in_family():
+    for a in ARCHS:
+        cfg = get_config(a)
+        r = cfg.reduced()
+        assert r.family == cfg.family
+        assert r.d_model <= 128 and r.vocab <= 512
+        assert (r.n_experts > 0) == (cfg.n_experts > 0)
+        assert (r.ssm_state > 0) == (cfg.ssm_state > 0)
+
+
+def test_roofline_terms_math():
+    c = rl.CellResult(
+        arch="x", shape="train_4k", mesh="single", chips=256,
+        flops_per_device=197e12,        # exactly 1s of compute per chip
+        bytes_per_device=819e9,         # exactly 1s of HBM per chip
+        wire_bytes_per_device=100e9,    # 2s of link
+        collective_detail={}, peak_memory_per_device=None,
+        model_flops=197e12 * 256 / 2,   # useful = half the HLO flops
+        model_flops_basis="6ND", tokens=1)
+    assert c.t_compute == pytest.approx(1.0)
+    assert c.t_memory == pytest.approx(1.0)
+    assert c.t_collective == pytest.approx(2.0)
+    assert c.bottleneck == "collective"
+    assert c.useful_flops_ratio == pytest.approx(0.5)
+    assert c.roofline_fraction == pytest.approx(0.25)
+    assert "TP degree" in c.suggestion or "FSDP" in c.suggestion
+
+
+def test_suggestions_cover_all_bottlenecks():
+    for arch in ("llama3-405b", "qwen3-moe-30b-a3b", "mars-rsga"):
+        for b in ("compute", "memory", "collective"):
+            for basis in ("6ND", "2ND"):
+                assert len(rl.suggest(arch, b, basis)) > 10

@@ -1,0 +1,44 @@
+"""Dry-run machinery test: one real cell compiles under 512 virtual devices
+(subprocess — device count locks at first jax init)."""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def test_dryrun_smallest_cell(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env.pop("XLA_FLAGS", None)          # dryrun sets its own
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "mamba2-780m", "--shape", "long_500k",
+         "--mesh", "single", "--out", str(tmp_path)],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=420)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "[ok] mamba2-780m long_500k single" in r.stdout
+    cell = json.loads(
+        (tmp_path / "mamba2-780m__long_500k__single.json").read_text())
+    assert cell["status"] == "ok"
+    assert cell["chips"] == 256
+    assert cell["wire_bytes_per_device"] > 0
+    assert cell["bottleneck"] in ("compute", "memory", "collective")
+
+
+def test_skip_rule_recorded(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "qwen3-4b", "--shape", "long_500k",
+         "--mesh", "single", "--out", str(tmp_path)],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=300)
+    assert r.returncode == 0, r.stdout + r.stderr
+    cell = json.loads(
+        (tmp_path / "qwen3-4b__long_500k__single.json").read_text())
+    assert cell["status"] == "skip"
+    assert "full-attention" in cell["note"]

@@ -1,0 +1,46 @@
+"""Fault tolerance: a training job killed mid-run resumes from the latest
+valid checkpoint and finishes — including on a different device count
+(elastic restart)."""
+import os
+import pathlib
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _train(ckpt_dir, steps, devices, timeout=None, extra=()):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    cmd = [sys.executable, "-m", "repro.launch.train",
+           "--arch", "qwen3-4b", "--reduced", "--lr", "3e-4",
+           "--steps", str(steps), "--batch", "4", "--seq", "64",
+           "--ckpt-dir", str(ckpt_dir), "--save-every", "4",
+           "--log-every", "4", "--mesh", "auto", *extra]
+    try:
+        return subprocess.run(cmd, capture_output=True, text=True, env=env,
+                              cwd=REPO, timeout=timeout)
+    except subprocess.TimeoutExpired as e:
+        return e          # simulated preemption
+
+
+def test_kill_and_resume(tmp_path):
+    ckpt = tmp_path / "ck"
+    # phase 1: run; SIGKILL via timeout once some checkpoints exist
+    # (compile ~10-20s, then ~0.1-0.3 s/step; steps sized so no machine
+    # finishes 8000 steps inside the 70 s window)
+    r1 = _train(ckpt, steps=8000, devices=2, timeout=70)
+    assert isinstance(r1, subprocess.TimeoutExpired), (
+        "expected the run to be killed mid-flight; it finished instead "
+        "(machine too fast? raise steps)")
+    from repro.train import checkpoint as ckpt_lib
+    step1 = ckpt_lib.latest_step(ckpt)
+    assert step1 is not None and 0 < step1 < 8000
+
+    # phase 2: resume on HALF the devices (elastic) and finish a short run
+    r2 = _train(ckpt, steps=step1 + 8, devices=1, timeout=300)
+    assert not isinstance(r2, subprocess.TimeoutExpired)
+    assert r2.returncode == 0, r2.stdout + r2.stderr
+    assert f"resumed from step {step1}" in r2.stdout, r2.stdout
+    assert "done:" in r2.stdout

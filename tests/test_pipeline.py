@@ -1,0 +1,80 @@
+"""End-to-end pipeline behaviour tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (MarsConfig, Mapper, build_index, map_chunk,
+                        score_accuracy)
+from repro.core.index import index_arrays
+from repro.signal import simulate
+
+
+def test_end_to_end_accuracy(small_ref, cfg_fixed, small_index, small_reads):
+    mapper = Mapper(small_index, cfg_fixed)
+    out = mapper.map_signals(small_reads.signals)
+    acc = score_accuracy(out, small_reads.true_pos, small_reads.true_strand,
+                         small_reads.mappable, small_reads.n_bases,
+                         small_ref.n_events)
+    assert acc["f1"] >= 0.85, acc
+    assert acc["precision"] >= 0.9, acc
+
+
+def test_kernel_backed_pipeline_matches_reference():
+    cfg = MarsConfig(hash_bits=12).with_mode("ms_fixed")
+    ref = simulate.make_reference(5_000, seed=5)
+    reads = simulate.sample_reads(ref, 4, signal_len=cfg.signal_len, seed=6)
+    idx = build_index(ref.events_concat, ref.n_events, cfg)
+    arrays = {k: jnp.asarray(v) for k, v in index_arrays(idx).items()}
+    sig = jnp.asarray(reads.signals)
+    out_ref = map_chunk(sig, arrays, cfg, use_kernels=False)
+    out_k = map_chunk(sig, arrays, cfg, use_kernels=True)
+    np.testing.assert_array_equal(np.asarray(out_ref.t_start),
+                                  np.asarray(out_k.t_start))
+    np.testing.assert_array_equal(np.asarray(out_ref.mapped),
+                                  np.asarray(out_k.mapped))
+    np.testing.assert_allclose(np.asarray(out_ref.score),
+                               np.asarray(out_k.score), rtol=1e-5)
+
+
+def test_bounds_do_not_change_results(small_ref, small_reads):
+    """Static bounds (H, max_anchors) sized per DESIGN Section 8: results on
+    a small dataset must be identical with much larger bounds."""
+    base = MarsConfig().with_mode("ms_fixed")
+    big = base.replace(max_hits_per_seed=64, max_anchors=2048)
+    o1 = Mapper(build_index(small_ref.events_concat, small_ref.n_events,
+                            base), base).map_signals(small_reads.signals)
+    o2 = Mapper(build_index(small_ref.events_concat, small_ref.n_events,
+                            big), big).map_signals(small_reads.signals)
+    agree = (np.asarray(o1.mapped) == np.asarray(o2.mapped)).mean()
+    assert agree >= 0.95, agree
+    both = np.asarray(o1.mapped) & np.asarray(o2.mapped)
+    np.testing.assert_array_equal(np.asarray(o1.t_start)[both],
+                                  np.asarray(o2.t_start)[both])
+
+
+def test_counters_are_consistent(small_index, cfg_fixed, small_reads):
+    out = Mapper(small_index, cfg_fixed).map_signals(small_reads.signals)
+    c = out.counters
+    assert c["n_hits_postfreq"] <= c["n_hits_raw"]
+    assert c["n_anchors_postvote"] <= c["n_hits_postfreq"]
+    assert c["n_sorted"] <= c["n_anchors_postvote"] + 1
+    assert c["n_seeds"] <= c["n_events"]
+    assert c["n_dp_pairs"] == c["n_sorted"] * cfg_fixed.chain_band
+
+
+def test_junk_reads_not_mapped(small_index, cfg_fixed):
+    rng = np.random.default_rng(7)
+    junk = rng.normal(100, 15, (8, cfg_fixed.signal_len)).astype(np.float32)
+    out = Mapper(small_index, cfg_fixed).map_signals(junk)
+    assert np.asarray(out.mapped).sum() <= 1   # precision on pure noise
+
+
+def test_reverse_strand_reads_map(small_ref, cfg_fixed, small_index):
+    reads = simulate.sample_reads(small_ref, 24,
+                                  signal_len=cfg_fixed.signal_len, seed=11)
+    out = Mapper(small_index, cfg_fixed).map_signals(reads.signals)
+    acc = score_accuracy(out, reads.true_pos, reads.true_strand,
+                         reads.mappable, reads.n_bases, small_ref.n_events)
+    rev = reads.true_strand == 1
+    mapped_rev = np.asarray(out.mapped)[rev]
+    assert mapped_rev.mean() > 0.7, "reverse-strand reads must map"

@@ -1,0 +1,57 @@
+"""Quantization property tests (hypothesis)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import quantization as Q
+from repro.core.config import MarsConfig
+
+CFG = MarsConfig()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(-5, 5, allow_nan=False), min_size=8, max_size=64))
+def test_symbols_in_range(vals):
+    e = jnp.asarray(np.array(vals, np.float32))
+    v = jnp.ones(e.shape, bool)
+    for fixed in (False, True):
+        cfg = CFG.replace(fixed_point=fixed)
+        sym = np.asarray(Q.quantize_events(e, v, cfg))
+        assert ((sym >= 0) & (sym < cfg.quant_levels)).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000))
+def test_monotone_in_input(seed):
+    """Larger event values never get smaller symbols (same read stats)."""
+    rng = np.random.default_rng(seed)
+    e = np.sort(rng.normal(0, 1, 32)).astype(np.float32)
+    v = jnp.ones(32, bool)
+    sym = np.asarray(Q.quantize_events(jnp.asarray(e), v, CFG))
+    assert (np.diff(sym) >= 0).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_fixed_matches_float_mostly(seed):
+    rng = np.random.default_rng(seed)
+    e = rng.normal(0, 1, 48).astype(np.float32)
+    v = jnp.ones(48, bool)
+    sf = np.asarray(Q.quantize_events(jnp.asarray(e), v,
+                                      CFG.replace(fixed_point=False)))
+    sx = np.asarray(Q.quantize_events(jnp.asarray(e), v,
+                                      CFG.replace(fixed_point=True)))
+    # fixed-point may differ by at most one bucket at boundaries
+    assert (np.abs(sf - sx) <= 1).all()
+    assert (sf == sx).mean() > 0.8
+
+
+def test_invalid_events_ignored_in_stats():
+    e = jnp.asarray(np.array([1, 2, 3, 4, 1000, -1000], np.float32))
+    v = jnp.asarray(np.array([1, 1, 1, 1, 0, 0], bool))
+    sym = np.asarray(Q.quantize_events(e, v, CFG))
+    # the valid prefix should span the alphabet sensibly (outliers masked)
+    assert sym[:4].max() < CFG.quant_levels
+    assert sym[:4].min() >= 0
+    assert sym[3] > sym[0]

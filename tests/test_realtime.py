@@ -1,0 +1,35 @@
+"""Real-time early-termination mapping (Read Until)."""
+import numpy as np
+
+from repro.core import build_index, score_accuracy
+from repro.core.pipeline import MapOutput
+from repro.core.realtime import map_realtime
+from repro.signal import simulate
+
+
+def test_early_termination_saves_signal(small_ref, cfg_fixed, small_index):
+    reads = simulate.sample_reads(small_ref, 32,
+                                  signal_len=cfg_fixed.signal_len, seed=9,
+                                  junk_frac=0.1)
+    res = map_realtime(reads.signals, small_index, cfg_fixed)
+    mappable = reads.mappable
+    # most mappable reads should resolve before the full read
+    early = res.samples_used[mappable] < cfg_fixed.signal_len
+    assert early.mean() > 0.5, res.samples_used[mappable]
+    assert res.mean_fraction_used < 0.8
+    # accuracy of early decisions must hold up
+    out = MapOutput(t_start=res.t_start, score=res.score, mapped=res.mapped,
+                    n_events=np.zeros_like(res.t_start), counters={})
+    acc = score_accuracy(out, reads.true_pos, reads.true_strand,
+                         reads.mappable, reads.n_bases, small_ref.n_events)
+    assert acc["precision"] >= 0.85, acc
+    assert acc["recall"] >= 0.75, acc
+
+
+def test_junk_reads_not_resolved_early(small_ref, cfg_fixed, small_index):
+    rng = np.random.default_rng(12)
+    junk = rng.normal(100, 15, (8, cfg_fixed.signal_len)).astype(np.float32)
+    res = map_realtime(junk, small_index, cfg_fixed)
+    # junk must consume the whole signal (no confident early call)
+    assert (res.samples_used == cfg_fixed.signal_len).mean() >= 0.75
+    assert res.mapped.sum() <= 1

@@ -1,0 +1,107 @@
+"""Hashing / index / seeding / vote / chaining unit tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import chaining, hashing, index as index_lib, seeding, vote
+from repro.core.config import MarsConfig
+from repro.core.index import index_arrays
+
+
+def test_pack_seeds_matches_numpy_twin():
+    cfg = MarsConfig()
+    rng = np.random.default_rng(0)
+    sym = rng.integers(0, cfg.quant_levels, 64)
+    keys_np = hashing.pack_seeds_np(sym, cfg)
+    keys_j, valid = hashing.pack_seeds(jnp.asarray(sym.astype(np.int32)),
+                                       jnp.int32(64), cfg)
+    n = 64 - cfg.seed_width + 1
+    np.testing.assert_array_equal(np.asarray(keys_j)[:n], keys_np)
+    assert np.asarray(valid)[:n].all()
+    assert not np.asarray(valid)[n:].any()
+
+
+def test_query_matches_bruteforce(small_ref, cfg_fixed, small_index):
+    """Index query == brute-force dict lookup for every seed."""
+    cfg = cfg_fixed
+    idx = small_index
+    # build a brute-force map key -> positions
+    from collections import defaultdict
+    brute = defaultdict(list)
+    for k, p in zip(idx.entries_key, idx.entries_pos):
+        brute[int(k)].append(int(p))
+    arrays = {k: jnp.asarray(v) for k, v in index_arrays(idx).items()}
+    rng = np.random.default_rng(1)
+    some_keys = rng.choice(idx.entries_key, 50, replace=False)
+    keys = jnp.asarray(some_keys.astype(np.uint32))
+    valid = jnp.ones(50, bool)
+    t_pos, hit_valid, counters = seeding.query_index(keys, valid, arrays, cfg)
+    for i in range(50):
+        expect = set(brute[int(some_keys[i])])
+        if len(expect) > cfg.thresh_freq or len(expect) > cfg.max_hits_per_seed:
+            continue
+        got = set(np.asarray(t_pos[i])[np.asarray(hit_valid[i])].tolist())
+        assert got == expect, (i, got, expect)
+
+
+def test_freq_filter_drops_frequent_seeds(small_ref, cfg_fixed):
+    cfg = cfg_fixed.replace(thresh_freq=2)
+    idx = index_lib.build_index(small_ref.events_concat, small_ref.n_events,
+                                cfg)
+    arrays = {k: jnp.asarray(v) for k, v in index_arrays(idx).items()}
+    # pick a key occurring > 2 times
+    vals, counts = np.unique(idx.entries_key, return_counts=True)
+    frequent = vals[counts > 2]
+    if frequent.size == 0:
+        pytest.skip("no frequent seeds in this reference")
+    keys = jnp.asarray(frequent[:8].astype(np.uint32))
+    valid = jnp.ones(keys.shape[0], bool)
+    _, hit_valid, counters = seeding.query_index(keys, valid, arrays, cfg)
+    assert int(counters["n_hits_postfreq"]) == 0
+    assert int(counters["n_hits_raw"]) > 0
+
+
+def test_vote_filter_keeps_colinear_drops_scattered():
+    cfg = MarsConfig(thresh_voting=4)
+    E, H = 32, 4
+    q = np.tile(np.arange(E)[:, None], (1, H)).astype(np.int32)
+    t = np.zeros((E, H), np.int32)
+    # colinear cluster: diag 5000 for slot 0; scattered for slot 1
+    t[:, 0] = 5000 + q[:, 0]
+    rng = np.random.default_rng(0)
+    t[:, 1] = rng.integers(0, 10**6, E)
+    valid = np.zeros((E, H), bool)
+    valid[:, :2] = True
+    keep, counters = vote.vote_filter(jnp.asarray(q), jnp.asarray(t),
+                                      jnp.asarray(valid), cfg)
+    keep = np.asarray(keep)
+    assert keep[:, 0].all(), "colinear anchors must survive"
+    assert keep[:, 1].sum() < E // 4, "scattered anchors must mostly die"
+
+
+def test_chain_score_bounded_by_anchor_count():
+    cfg = MarsConfig(max_anchors=64, chain_band=16)
+    rng = np.random.default_rng(2)
+    E, H = 16, 4
+    q = rng.integers(0, 100, (E, H)).astype(np.int32)
+    t = rng.integers(0, 5000, (E, H)).astype(np.int32)
+    v = rng.random((E, H)) < 0.7
+    res, counters = chaining.chain_anchors(jnp.asarray(q), jnp.asarray(t),
+                                           jnp.asarray(v), cfg)
+    n_valid = int(np.asarray(v).sum())
+    assert float(res.score) <= cfg.anchor_score * n_valid + 1e-6
+
+
+def test_chain_finds_planted_colinear_run():
+    cfg = MarsConfig(max_anchors=64, chain_band=16, min_chain_score=4.0)
+    E, H = 32, 2
+    q = np.tile(np.arange(E)[:, None], (1, H)).astype(np.int32)
+    t = np.zeros((E, H), np.int32)
+    t[:, 0] = 7000 + q[:, 0] * 2          # near-colinear planted chain
+    rng = np.random.default_rng(3)
+    t[:, 1] = rng.integers(0, 10**6, E)
+    v = np.ones((E, H), bool)
+    res, _ = chaining.chain_anchors(jnp.asarray(q), jnp.asarray(t),
+                                    jnp.asarray(v), cfg)
+    assert bool(res.mapped)
+    assert abs(int(res.t_start) - 7000) < 200
