@@ -20,7 +20,7 @@ from typing import Dict
 import numpy as np
 
 from repro.core import MarsConfig, Mapper, build_index, score_accuracy
-from repro.core import ssd_model, workload
+from repro.core import ssd_model, stages, workload
 from repro.signal import datasets, simulate
 
 CACHE = pathlib.Path("results/bench")
@@ -43,25 +43,32 @@ FIG5_FRACTIONS = {
 }
 
 
-def pipeline_run(ds_key: str, mode: str, force: bool = False) -> Dict:
+def pipeline_run(ds_key: str, mode: str, force: bool = False,
+                 backend: str = stages.REFERENCE) -> Dict:
     """Run (or load cached) one dataset x mode mapping; returns counters,
-    accuracy, wall time and raw sizes."""
+    accuracy, wall time and raw sizes.
+
+    ``backend`` selects the stage-registry backend plan ("reference" or
+    "pallas"); counters follow stages.CHUNK_COUNTER_SCHEMA either way, so
+    the hardware model consumes both identically."""
     CACHE.mkdir(parents=True, exist_ok=True)
-    f = CACHE / f"{ds_key}_{mode}.json"
+    suffix = "" if backend == stages.REFERENCE else f"_{backend}"
+    f = CACHE / f"{ds_key}_{mode}{suffix}.json"
     if f.exists() and not force:
         return json.loads(f.read_text())
     spec = datasets.DATASETS[ds_key]
     cfg = datasets.config_for(spec).with_mode(mode)
     ref, reads = datasets.build(spec, cfg)
     index = build_index(ref.events_concat, ref.n_events, cfg)
-    mapper = Mapper(index, cfg)
+    mapper = Mapper(index, cfg, backend=backend)
     t0 = time.time()
     out = mapper.map_signals(reads.signals, chunk=32)
     wall = time.time() - t0
     acc = score_accuracy(out, reads.true_pos, reads.true_strand,
                          reads.mappable, reads.n_bases, ref.n_events)
     rec = dict(
-        dataset=ds_key, mode=mode,
+        dataset=ds_key, mode=mode, backend=backend,
+        plan=[list(p) for p in mapper.plan],
         counters={k: int(v) for k, v in out.counters.items()},
         accuracy={k: float(v) for k, v in acc.items()},
         wall_time=wall,

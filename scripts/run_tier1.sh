@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 verify: the fast, full-collection test pass.
+#
+#   scripts/run_tier1.sh            # fast pass (skips @slow property sweeps)
+#   scripts/run_tier1.sh --all      # everything, including @slow
+#   scripts/run_tier1.sh tests/test_pipeline.py   # extra pytest args pass through
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+MARKER=(-m "not slow")
+if [[ "${1:-}" == "--all" ]]; then
+    MARKER=()
+    shift
+fi
+exec python -m pytest -x -q "${MARKER[@]}" "$@"

@@ -3,16 +3,22 @@
 Public API:
     MarsConfig            static pipeline configuration
     build_index           offline reference indexing
+    stages                stage-graph engine + backend registry
     Mapper / map_chunk    online read mapping (jit)
+    map_chunk_sharded     data-parallel mapping over a device mesh
+    driver                unified streaming host driver + ProgressLog
     score_accuracy        P/R/F1 vs. ground truth
 """
+from repro.core import driver, stages
 from repro.core.config import (DEFAULT, MODE_MS_FIXED, MODE_MS_FLOAT,
                                MODE_RH2, MODES, MarsConfig)
 from repro.core.index import Index, build_index, index_arrays
-from repro.core.pipeline import MapOutput, Mapper, map_chunk, score_accuracy
+from repro.core.pipeline import (MapOutput, Mapper, map_chunk,
+                                 map_chunk_sharded, map_read, score_accuracy)
 
 __all__ = [
     "DEFAULT", "MODES", "MODE_RH2", "MODE_MS_FLOAT", "MODE_MS_FIXED",
     "MarsConfig", "Index", "build_index", "index_arrays",
-    "MapOutput", "Mapper", "map_chunk", "score_accuracy",
+    "MapOutput", "Mapper", "map_chunk", "map_chunk_sharded", "map_read",
+    "driver", "stages", "score_accuracy",
 ]

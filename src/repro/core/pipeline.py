@@ -1,16 +1,30 @@
 """End-to-end MARS read-mapping pipeline (paper Fig. 1 / Fig. 7 dataflow).
 
-The per-read program chains the fine-grained tasks exactly as the MARS
-Control Unit sequences them (Section 6.1.3):
+The per-read program is the stage graph of ``core/stages.py`` — the same
+fine-grained tasks the MARS Control Unit sequences (Section 6.1.3):
 
     (1) event detection: signal-to-event conversion (1a) + quantization (1b)
     (2) seeding: hash-value generation (c), frequency filter (d),
         hash-table query (e), seed-and-vote filter (f)
     (3) chaining: bucket/sort (g,h) + dynamic programming (i)
 
-Everything is static-shape and jit-compiled; `map_chunk` vmaps the per-read
-program over a chunk of reads (a "channel stripe" in MARS terms).  Counter
-outputs feed the analytic SSD performance model (ssd_model.py).
+Backend selection (reference jnp vs accelerated Pallas) flows ONLY through
+the stage registry: ``map_chunk`` takes a static, hashable *plan* resolved
+by ``stages.resolve_plan`` — no per-stage callables.  ``use_kernels=True``
+routes every stage through its registered Pallas backend (falling back to
+reference where a kernel does not support the config).
+
+Everything is static-shape and jit-compiled; ``map_chunk`` vmaps the
+per-read program over a chunk of reads (a "channel stripe" in MARS terms)
+and ``map_chunk_sharded`` runs the identical program under ``shard_map``
+with reads sharded over the mesh and the index replicated — bit-identical
+outputs, counters combined with integer psum.  Counter outputs follow the
+uniform schema ``stages.CHUNK_COUNTER_SCHEMA`` consumed by the analytic
+SSD performance model (ssd_model.py via workload.py).
+
+Pad rows (chunks shorter than the static chunk size) are masked out of
+every counter and of ``mapped`` via the traced ``n_valid`` argument, so
+workload counts never inflate on non-multiple-of-chunk inputs.
 """
 from __future__ import annotations
 
@@ -22,7 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import chaining, events, hashing, quantization, seeding, vote
+from repro.core import driver, stages
 from repro.core.config import MarsConfig
 from repro.core.index import Index, index_arrays
 
@@ -36,94 +50,155 @@ class MapOutput(NamedTuple):
 
 
 def map_read(signal: jnp.ndarray, index: Dict[str, jnp.ndarray],
-             cfg: MarsConfig, gather=None, sorter=None, dp=None,
-             detector=None):
-    """signal: (S,) f32 -> per-read mapping + counters."""
-    # (1) event detection
-    if detector is None:
-        ev, n_ev, _ = events.detect_events(signal, cfg)
-    else:
-        ev, n_ev = detector(signal)
-    ev_valid = jnp.arange(cfg.max_events) < n_ev
-    sym = quantization.quantize_events(ev, ev_valid, cfg)
-    # (2) seeding
-    keys, seed_valid = hashing.pack_seeds(sym, n_ev, cfg)
-    seed_valid = hashing.minimizer_mask(keys, seed_valid,
-                                        cfg.minimizer_radius)
-    t_pos, hit_valid, c_seed = seeding.query_index(keys, seed_valid, index,
-                                                   cfg, gather=gather)
-    q_pos = jnp.broadcast_to(
-        jnp.arange(cfg.max_events, dtype=jnp.int32)[:, None], t_pos.shape)
-    hit_valid, c_vote = vote.vote_filter(q_pos, t_pos, hit_valid, cfg)
-    # (3) chaining
-    res, c_chain = chaining.chain_anchors(q_pos, t_pos, hit_valid, cfg,
-                                          sorter=sorter, dp=dp)
-    counters = dict(n_events=n_ev, **c_seed, **c_vote, **c_chain)
-    return res, counters
+             cfg: MarsConfig, plan: Optional[stages.Plan] = None):
+    """signal: (S,) f32 -> (ChainResult, counters) via the stage engine."""
+    if plan is None:
+        plan = stages.resolve_plan(cfg, stages.REFERENCE)
+    return stages.execute_read(signal, index, cfg, plan)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "use_kernels"))
-def map_chunk(signals: jnp.ndarray, index: Dict[str, jnp.ndarray],
-              cfg: MarsConfig, use_kernels: bool = False) -> MapOutput:
-    """signals: (R, S) f32.  The jit'd mapping program for one chunk."""
-    gather = sorter = dp = detector = None
-    if use_kernels:
-        from repro.kernels.pluto_lookup import ops as pluto_ops
-        from repro.kernels.bitonic_sort import ops as bitonic_ops
-        from repro.kernels.chain_dp import ops as dp_ops
-        from repro.kernels.event_detect import ops as ed_ops
-        gather = pluto_ops.lookup
-        sorter = bitonic_ops.sort1d
-        dp = lambda q, t, v: tuple(
-            x[0] for x in dp_ops.chain_dp(q[None], t[None], v[None], cfg))
-        if cfg.fixed_point and cfg.early_quantization:
-            detector = lambda s: tuple(
-                x[0] for x in ed_ops.event_detect(s[None], cfg))
-    fn = lambda s: map_read(s, index, cfg, gather=gather, sorter=sorter,
-                            dp=dp, detector=detector)
+def _chunk_program(signals: jnp.ndarray, index: Dict[str, jnp.ndarray],
+                   cfg: MarsConfig, plan: stages.Plan,
+                   row_valid: jnp.ndarray) -> MapOutput:
+    """The shared chunk body: vmap the stage graph, mask pad rows out of
+    the counters, and sum to the uniform per-chunk counter schema."""
+    fn = lambda s: stages.execute_read(s, index, cfg, plan)
     res, counters = jax.vmap(fn)(signals)
-    summed = {k: v.sum().astype(jnp.int32) for k, v in counters.items()}
-    summed["n_reads"] = jnp.int32(signals.shape[0])
-    summed["n_samples"] = jnp.int32(signals.shape[0] * signals.shape[1])
-    return MapOutput(t_start=res.t_start, score=res.score, mapped=res.mapped,
-                     n_events=counters["n_events"].astype(jnp.int32),
-                     counters=summed)
+    rv = row_valid
+    summed = {k: jnp.where(rv, v, jnp.zeros_like(v)).sum().astype(jnp.int32)
+              for k, v in counters.items()}
+    summed["n_reads"] = rv.sum().astype(jnp.int32)
+    summed["n_samples"] = (rv.sum() * signals.shape[1]).astype(jnp.int32)
+    return MapOutput(
+        t_start=res.t_start, score=res.score, mapped=res.mapped & rv,
+        n_events=jnp.where(rv, counters["n_events"], 0).astype(jnp.int32),
+        counters=summed)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "use_kernels", "plan"))
+def map_chunk(signals: jnp.ndarray, index: Dict[str, jnp.ndarray],
+              cfg: MarsConfig, use_kernels: bool = False,
+              n_valid=None, plan: Optional[stages.Plan] = None) -> MapOutput:
+    """signals: (R, S) f32.  The jit'd mapping program for one chunk.
+
+    ``plan`` (static) overrides backend selection; otherwise it resolves
+    from the registry: every stage's Pallas backend when ``use_kernels``,
+    reference backends when not.  ``n_valid`` (traced; defaults to R) masks
+    trailing pad rows out of counters and the ``mapped`` flags.
+    """
+    if plan is None:
+        plan = stages.resolve_plan(
+            cfg, stages.PALLAS if use_kernels else stages.REFERENCE)
+    R = signals.shape[0]
+    if n_valid is None:
+        row_valid = jnp.ones((R,), bool)
+    else:
+        row_valid = jnp.arange(R) < n_valid
+    return _chunk_program(signals, index, cfg, plan, row_valid)
+
+
+# --------------------------------------------------------------------------- #
+# Sharded chunk mapping (shard_map over the read axis)
+# --------------------------------------------------------------------------- #
+@functools.lru_cache(maxsize=None)
+def _sharded_chunk_fn(cfg: MarsConfig, mesh, plan: stages.Plan):
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    axes = tuple(mesh.axis_names)
+
+    def body(signals, index, n_valid):
+        # local shard: (R_loc, S); reconstruct global row ids for masking
+        shard_id = jnp.int32(0)
+        for a in axes:
+            shard_id = shard_id * mesh.shape[a] + jax.lax.axis_index(a)
+        r_loc = signals.shape[0]
+        row_valid = (shard_id * r_loc + jnp.arange(r_loc)) < n_valid
+        out = _chunk_program(signals, index, cfg, plan, row_valid)
+        counters = {k: jax.lax.psum(v, axes) for k, v in out.counters.items()}
+        return out.t_start, out.score, out.mapped, out.n_events, counters
+
+    counter_spec = {k: P() for k in stages.CHUNK_COUNTER_SCHEMA}
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P(axes, None), P(), P()),
+                   out_specs=(P(axes), P(axes), P(axes), P(axes),
+                              counter_spec),
+                   check_rep=False)
+    return jax.jit(fn)
+
+
+def map_chunk_sharded(signals: jnp.ndarray, index: Dict[str, jnp.ndarray],
+                      cfg: MarsConfig, mesh, use_kernels: bool = False,
+                      n_valid=None,
+                      plan: Optional[stages.Plan] = None) -> MapOutput:
+    """Data-parallel ``map_chunk``: reads sharded over EVERY mesh axis (the
+    MARS "channel stripe"), index replicated, counters psum-combined.
+
+    Per-read programs are independent, so outputs are bit-identical to the
+    single-device path; integer counter sums are associative, so the psum
+    is exact.  R must divide evenly over the mesh.
+    """
+    if plan is None:
+        plan = stages.resolve_plan(
+            cfg, stages.PALLAS if use_kernels else stages.REFERENCE)
+    R = signals.shape[0]
+    n_dev = int(np.prod(tuple(mesh.shape.values())))
+    if R % n_dev != 0:
+        raise ValueError(f"chunk of {R} reads does not shard over {n_dev} "
+                         f"devices; pad the chunk to a multiple")
+    from repro.distributed.sharding import mapping_chunk_shardings
+    sig_sh, _ = mapping_chunk_shardings(mesh)
+    signals = jax.device_put(signals, sig_sh)
+    nv = jnp.int32(R if n_valid is None else n_valid)
+    t, s, m, ne, counters = _sharded_chunk_fn(cfg, mesh, plan)(
+        signals, index, nv)
+    return MapOutput(t_start=t, score=s, mapped=m, n_events=ne,
+                     counters=counters)
 
 
 # --------------------------------------------------------------------------- #
 # Host-side driver + accuracy scoring
 # --------------------------------------------------------------------------- #
 class Mapper:
-    """Convenience host wrapper: owns the index arrays and chunks reads."""
+    """Convenience host wrapper: owns the index arrays, resolves the
+    backend plan once, and streams chunks through the unified driver.
+
+    ``backend`` names a registry backend ("reference"/"pallas"); the legacy
+    ``use_kernels=True`` flag is shorthand for backend="pallas".  With a
+    ``mesh`` the chunks run through ``map_chunk_sharded`` instead.
+    """
 
     def __init__(self, index: Index, cfg: Optional[MarsConfig] = None,
-                 use_kernels: bool = False):
+                 use_kernels: bool = False, backend: Optional[str] = None,
+                 mesh=None):
         self.index = index
         self.cfg = cfg or index.cfg
-        self.use_kernels = use_kernels
+        self.backend = backend or (
+            stages.PALLAS if use_kernels else stages.REFERENCE)
+        self.plan = stages.resolve_plan(self.cfg, self.backend)
+        self.mesh = mesh
         self.arrays = {k: jnp.asarray(v) for k, v in index_arrays(index).items()}
+        if mesh is not None:
+            from repro.distributed.sharding import mapping_chunk_shardings
+            _, rep = mapping_chunk_shardings(mesh)
+            self.arrays = {k: jax.device_put(v, rep)
+                           for k, v in self.arrays.items()}
+
+    def chunk_fn(self):
+        """The (signals, n_valid) -> MapOutput program for driver.stream_map
+        consumers that bring their own chunk source (e.g. the launcher's
+        SignalReader)."""
+        if self.mesh is not None:
+            return lambda sig, nv: map_chunk_sharded(
+                jnp.asarray(sig), self.arrays, self.cfg, self.mesh,
+                n_valid=nv, plan=self.plan)
+        return lambda sig, nv: map_chunk(jnp.asarray(sig), self.arrays,
+                                         self.cfg, n_valid=nv, plan=self.plan)
 
     def map_signals(self, signals: np.ndarray, chunk: int = 64) -> MapOutput:
-        outs = []
-        for lo in range(0, signals.shape[0], chunk):
-            part = signals[lo:lo + chunk]
-            if part.shape[0] < chunk:   # pad to static chunk size
-                pad = chunk - part.shape[0]
-                part = np.concatenate([part, np.zeros((pad,) + part.shape[1:],
-                                                      part.dtype)])
-            outs.append(map_chunk(jnp.asarray(part), self.arrays, self.cfg,
-                                  self.use_kernels))
-        n = signals.shape[0]
-        t_start = np.concatenate([np.asarray(o.t_start) for o in outs])[:n]
-        score = np.concatenate([np.asarray(o.score) for o in outs])[:n]
-        mapped = np.concatenate([np.asarray(o.mapped) for o in outs])[:n]
-        n_events = np.concatenate([np.asarray(o.n_events) for o in outs])[:n]
-        counters: Dict[str, int] = {}
-        for o in outs:
-            for k, v in o.counters.items():
-                counters[k] = counters.get(k, 0) + int(v)
-        return MapOutput(t_start=t_start, score=score, mapped=mapped,
-                         n_events=n_events, counters=counters)
+        stream = driver.stream_map(self.chunk_fn(),
+                                   driver.array_chunks(signals, chunk))
+        return driver.collect(stream)
 
 
 def score_accuracy(out: MapOutput, true_pos: np.ndarray,

@@ -8,8 +8,10 @@ incrementally over growing signal prefixes and stops at the first
 confident decision.
 
 Each prefix length is a separate jit specialization of the same pipeline
-(static shapes); the host driver advances only unresolved reads to the
-next stage — mirroring how a sequencer streams chunks per channel.
+(static shapes); the host side advances only unresolved reads to the next
+stage — mirroring how a sequencer streams chunks per channel.  Chunking,
+padding and device streaming go through the unified driver
+(core/driver.py), the same machinery Mapper and the launcher use.
 """
 from __future__ import annotations
 
@@ -19,6 +21,7 @@ from typing import Dict, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import driver
 from repro.core.config import MarsConfig
 from repro.core.index import Index, index_arrays
 from repro.core.pipeline import map_chunk
@@ -69,16 +72,22 @@ def map_realtime(signals: np.ndarray, index: Index, cfg: MarsConfig,
         scfg = _stage_cfg(cfg, L)
         last = si == len(stages) - 1
         thresh = scfg.min_chain_score if last else min_score
-        for lo in range(0, idxs.size, chunk):
-            sel = idxs[lo:lo + chunk]
-            part = signals[sel, :L]
-            if part.shape[0] < chunk:          # pad to the jit shape
-                pad = np.zeros((chunk - part.shape[0], L), np.float32)
-                part = np.concatenate([part, pad])
-            out = map_chunk(jnp.asarray(part), arrays, scfg)
-            o_t = np.asarray(out.t_start)[:sel.size]
-            o_s = np.asarray(out.score)[:sel.size]
-            o_m = np.asarray(out.mapped)[:sel.size]
+        fn = lambda sig, nv: map_chunk(jnp.asarray(sig), arrays, scfg,
+                                       n_valid=nv)
+
+        def sel_chunks():
+            # slice the unresolved rows lazily, one chunk at a time (no
+            # full (n_unresolved, L) copy up front)
+            for ci, lo in enumerate(range(0, idxs.size, chunk)):
+                sel = idxs[lo:lo + chunk]
+                part = np.asarray(signals[sel, :L], np.float32)
+                yield ci, sel.size, driver.pad_rows(part, chunk)
+
+        for ci, n_valid, out in driver.stream_map(fn, sel_chunks()):
+            sel = idxs[ci * chunk:ci * chunk + n_valid]
+            o_t = np.asarray(out.t_start)
+            o_s = np.asarray(out.score)
+            o_m = np.asarray(out.mapped)
             decide = (o_m & (o_s >= thresh)) if not last else o_m
             done = sel[decide]
             t_start[done] = o_t[decide]

@@ -1,0 +1,273 @@
+"""Stage-graph execution engine for the MARS RSGA pipeline.
+
+The MARS Control Unit (paper Section 6.1.3) sequences fine-grained tasks —
+event detection, quantization, seeding, hash-table query, seed-and-vote,
+anchor sort, chaining DP — across heterogeneous in-storage units.  This
+module is the software analogue: the per-read program is an explicit graph
+of named ``Stage``s, each with one or more registered ``Backend``s
+(a pure-jnp *reference* implementation and, where a Pallas kernel exists,
+an accelerated *pallas* one).  Backend selection is resolved per-config
+into a static, hashable *plan* — no per-stage callables ever thread
+through ``map_read``/``map_chunk``.
+
+Dataflow state is a flat dict of arrays keyed by the names below; every
+stage consumes/produces a documented subset:
+
+    signal      (S,)   f32   raw read samples            [input]
+    events      (E,)   f32   event means                 [detect]
+    n_events    ()     i32   valid event count           [detect]
+    symbols     (E,)   i32   quantized event symbols     [quantize]
+    keys        (E,)   u32   seed hash keys              [seed]
+    seed_valid  (E,)   bool  valid seed mask             [seed]
+    q_pos       (E,H)  i32   query positions of anchors  [query]
+    t_pos       (E,H)  i32   target positions of anchors [query]
+    hit_valid   (E,H)  bool  surviving anchors           [query, vote]
+    sq, st, sv  (A,)         sorted anchors + validity   [sort]
+    f, diag0    (A,)         DP chain scores/start diags [dp]
+    result      ChainResult  mapping decision            [finalize]
+    counters    dict         uniform counter schema (COUNTER_SCHEMA)
+
+Registering an accelerated backend (each kernel's ``ops.py`` does this at
+import; ``resolve_plan`` imports them lazily):
+
+    from repro.core import stages
+    stages.register_backend("query", stages.PALLAS, my_backend_fn,
+                            supports=lambda cfg: True)
+
+Backends unavailable for a config (``supports`` false) or unregistered
+fall back to the reference implementation, so a plan always covers every
+stage.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import chaining, events, hashing, quantization, seeding, vote
+from repro.core.config import MarsConfig
+
+State = Dict[str, Any]
+
+# Execution order of the per-read program (paper Fig. 1 steps 1a-3i).
+STAGE_ORDER: Tuple[str, ...] = (
+    "detect",     # (1a/1b) signal -> event means
+    "quantize",   # (1b)    event means -> symbols
+    "seed",       # (2c)    symbols -> hash keys (+ minimizer winnowing)
+    "query",      # (2d/2e) hash-table gather + frequency filter
+    "vote",       # (2f)    seed-and-vote filter
+    "sort",       # (3g/3h) anchor sort (bitonic Sorter/Merger)
+    "dp",         # (3i)    banded chaining DP
+    "finalize",   #         best/second-best chain -> mapping decision
+)
+
+# Canonical backend names.
+REFERENCE = "reference"
+PALLAS = "pallas"
+
+# Modules that register accelerated backends (imported lazily the first
+# time a plan asks for them, so importing core never pulls in Pallas).
+_BACKEND_MODULES: Dict[str, Tuple[str, ...]] = {
+    PALLAS: (
+        "repro.kernels.event_detect.ops",
+        "repro.kernels.pluto_lookup.ops",
+        "repro.kernels.bitonic_sort.ops",
+        "repro.kernels.chain_dp.ops",
+    ),
+}
+_loaded_backend_modules = set()
+
+# Uniform counter schema: every map_chunk output carries exactly these
+# per-chunk counters (plus n_reads / n_samples added by the chunk program).
+# workload.from_counters / ssd_model consume them by name.
+COUNTER_SCHEMA: Tuple[str, ...] = (
+    "n_events", "n_seeds", "n_bucket_probes", "n_hits_raw",
+    "n_hits_postfreq", "n_hits_exact", "n_votes_cast",
+    "n_anchors_postvote", "n_sorted", "n_dp_pairs",
+)
+CHUNK_COUNTER_SCHEMA: Tuple[str, ...] = COUNTER_SCHEMA + (
+    "n_reads", "n_samples")
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """One implementation of one stage.
+
+    fn(state, cfg, index) -> new state dict.  ``supports`` gates configs
+    the implementation cannot serve (e.g. the fixed-point event-detect
+    kernel under a float config); unsupported backends resolve to the
+    reference implementation instead.
+    """
+    stage: str
+    name: str
+    fn: Callable[[State, MarsConfig, Dict[str, jnp.ndarray]], State]
+    supports: Optional[Callable[[MarsConfig], bool]] = None
+
+
+_REGISTRY: Dict[Tuple[str, str], Backend] = {}
+
+
+def register_backend(stage: str, name: str, fn,
+                     supports=None, replace: bool = False) -> None:
+    if stage not in STAGE_ORDER:
+        raise ValueError(f"unknown stage {stage!r}; stages: {STAGE_ORDER}")
+    key = (stage, name)
+    if key in _REGISTRY and not replace:
+        raise ValueError(f"backend {key} already registered")
+    _REGISTRY[key] = Backend(stage=stage, name=name, fn=fn, supports=supports)
+
+
+def get_backend(stage: str, name: str) -> Backend:
+    return _REGISTRY[(stage, name)]
+
+
+def registered_backends(stage: str) -> Tuple[str, ...]:
+    return tuple(sorted(n for (s, n) in _REGISTRY if s == stage))
+
+
+def _ensure_backend_loaded(name: str) -> None:
+    if name in _loaded_backend_modules:
+        return
+    for mod in _BACKEND_MODULES.get(name, ()):
+        importlib.import_module(mod)
+    _loaded_backend_modules.add(name)
+
+
+Plan = Tuple[Tuple[str, str], ...]
+
+
+def resolve_plan(cfg: MarsConfig, backend: str = REFERENCE) -> Plan:
+    """Resolve the per-stage backend choice for one config.
+
+    Returns a hashable ((stage, backend_name), ...) tuple in STAGE_ORDER —
+    usable as a static jit argument.  Stages without the requested backend
+    (or whose backend does not support ``cfg``) fall back to reference.
+    """
+    _ensure_backend_loaded(backend)
+    known = ({REFERENCE} | set(_BACKEND_MODULES)
+             | {n for _, n in _REGISTRY})
+    if backend not in known:
+        raise ValueError(f"unknown backend {backend!r}; known: "
+                         f"{sorted(known)}")
+    plan = []
+    for stage in STAGE_ORDER:
+        b = _REGISTRY.get((stage, backend))
+        if b is None or (b.supports is not None and not b.supports(cfg)):
+            b = _REGISTRY[(stage, REFERENCE)]
+        plan.append((stage, b.name))
+    return tuple(plan)
+
+
+def execute_read(signal: jnp.ndarray, index: Dict[str, jnp.ndarray],
+                 cfg: MarsConfig, plan: Plan):
+    """Run the per-read stage graph.  signal: (S,) f32.
+
+    Returns (ChainResult, counters) with counters exactly COUNTER_SCHEMA.
+    """
+    state: State = {"signal": signal, "counters": {}}
+    for stage, bname in plan:
+        state = _REGISTRY[(stage, bname)].fn(state, cfg, index)
+    counters = state["counters"]
+    missing = missing_counters(counters)
+    if missing:
+        raise RuntimeError(f"plan {plan} produced incomplete counters; "
+                           f"missing {missing}")
+    return state["result"], counters
+
+
+def missing_counters(counters: Dict[str, Any]) -> Tuple[str, ...]:
+    return tuple(k for k in COUNTER_SCHEMA if k not in counters)
+
+
+# --------------------------------------------------------------------------- #
+# Parametrized stage bodies.  Reference backends call these with the jnp
+# default; kernel ops.py modules call them with their accelerated primitive
+# (gather / sorter / dp / detector) — keeping the math in ONE place.
+# --------------------------------------------------------------------------- #
+def detect_with(state: State, cfg: MarsConfig, index, detector=None) -> State:
+    if detector is None:
+        ev, n_ev, _ = events.detect_events(state["signal"], cfg)
+    else:
+        ev, n_ev = detector(state["signal"])
+    return {**state, "events": ev, "n_events": n_ev,
+            "counters": {**state["counters"], "n_events": n_ev}}
+
+
+def quantize_ref(state: State, cfg: MarsConfig, index) -> State:
+    ev_valid = jnp.arange(cfg.max_events) < state["n_events"]
+    sym = quantization.quantize_events(state["events"], ev_valid, cfg)
+    return {**state, "symbols": sym}
+
+
+def seed_ref(state: State, cfg: MarsConfig, index) -> State:
+    keys, valid = hashing.pack_seeds(state["symbols"], state["n_events"], cfg)
+    valid = hashing.minimizer_mask(keys, valid, cfg.minimizer_radius)
+    return {**state, "keys": keys, "seed_valid": valid}
+
+
+def query_with(state: State, cfg: MarsConfig, index, gather=None) -> State:
+    t_pos, hit_valid, c = seeding.query_index(
+        state["keys"], state["seed_valid"], index, cfg, gather=gather)
+    q_pos = jnp.broadcast_to(
+        jnp.arange(cfg.max_events, dtype=jnp.int32)[:, None], t_pos.shape)
+    return {**state, "q_pos": q_pos, "t_pos": t_pos, "hit_valid": hit_valid,
+            "counters": {**state["counters"], **c}}
+
+
+def vote_ref(state: State, cfg: MarsConfig, index) -> State:
+    hit_valid, c = vote.vote_filter(state["q_pos"], state["t_pos"],
+                                    state["hit_valid"], cfg)
+    return {**state, "hit_valid": hit_valid,
+            "counters": {**state["counters"], **c}}
+
+
+def sort_with(state: State, cfg: MarsConfig, index, sorter=None) -> State:
+    sq, st, sv = chaining.sort_anchors(state["q_pos"], state["t_pos"],
+                                       state["hit_valid"], cfg, sorter=sorter)
+    n_sorted = jnp.minimum(state["hit_valid"].sum(), cfg.max_anchors)
+    return {**state, "sq": sq, "st": st, "sv": sv,
+            "counters": {**state["counters"], "n_sorted": n_sorted}}
+
+
+def dp_with(state: State, cfg: MarsConfig, index, dp=None) -> State:
+    if dp is None:
+        f, diag0 = chaining.chain_dp(state["sq"], state["st"], state["sv"],
+                                     cfg)
+    else:
+        f, diag0 = dp(state["sq"], state["st"], state["sv"])
+    n_dp_pairs = state["sv"].sum() * cfg.chain_band
+    return {**state, "f": f, "diag0": diag0,
+            "counters": {**state["counters"], "n_dp_pairs": n_dp_pairs}}
+
+
+def finalize_ref(state: State, cfg: MarsConfig, index) -> State:
+    res = chaining.best_chain(state["f"], state["diag0"], state["sv"], cfg)
+    return {**state, "result": res}
+
+
+def _detect_ref(state, cfg, index):
+    return detect_with(state, cfg, index, detector=None)
+
+
+def _query_ref(state, cfg, index):
+    return query_with(state, cfg, index, gather=None)
+
+
+def _sort_ref(state, cfg, index):
+    return sort_with(state, cfg, index, sorter=None)
+
+
+def _dp_ref(state, cfg, index):
+    return dp_with(state, cfg, index, dp=None)
+
+
+register_backend("detect", REFERENCE, _detect_ref)
+register_backend("quantize", REFERENCE, quantize_ref)
+register_backend("seed", REFERENCE, seed_ref)
+register_backend("query", REFERENCE, _query_ref)
+register_backend("vote", REFERENCE, vote_ref)
+register_backend("sort", REFERENCE, _sort_ref)
+register_backend("dp", REFERENCE, _dp_ref)
+register_backend("finalize", REFERENCE, finalize_ref)

@@ -12,6 +12,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict
 
+from repro.core import stages
 from repro.core.config import MarsConfig
 
 
@@ -43,7 +44,11 @@ class Workload:
 
 def from_counters(counters: Dict[str, int], cfg: MarsConfig,
                   index_bytes: int) -> Workload:
-    """Build a Workload from MapOutput.counters."""
+    """Build a Workload from MapOutput.counters (the uniform per-chunk
+    schema stages.CHUNK_COUNTER_SCHEMA every backend plan must emit)."""
+    missing = [k for k in stages.CHUNK_COUNTER_SCHEMA if k not in counters]
+    if missing:
+        raise ValueError(f"counters missing {missing}; got {sorted(counters)}")
     n_reads = int(counters["n_reads"])
     n_samples = int(counters["n_samples"])
     n_events = int(counters["n_events"])

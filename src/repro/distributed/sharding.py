@@ -144,3 +144,17 @@ def replicated(tree_abstract, mesh: Mesh):
     return jax.tree_util.tree_map(
         lambda l: NamedSharding(mesh, P(*([None] * len(l.shape)))),
         tree_abstract)
+
+
+# --------------------------------------------------------------------------- #
+# MARS read mapping (data-parallel map_chunk)
+# --------------------------------------------------------------------------- #
+def mapping_chunk_shardings(mesh: Mesh):
+    """Layouts for the sharded map_chunk path (core/pipeline.py): raw reads
+    sharded over EVERY mesh axis (the MARS "channel stripe" — each chip
+    maps its own reads), reference index replicated on all chips.
+
+    Returns (signals_sharding for (R, S), replicated_sharding for the
+    index arrays)."""
+    axes = tuple(mesh.axis_names)
+    return (NamedSharding(mesh, P(axes, None)), NamedSharding(mesh, P()))

@@ -9,5 +9,15 @@ Kernels target TPU; on this CPU-only container they run (and are tested)
 in interpret mode.  `INTERPRET` flips automatically.
 """
 import jax
+from jax.experimental.pallas import tpu as _pltpu
 
 INTERPRET = jax.default_backend() == "cpu"
+
+# jax renamed TPUCompilerParams -> CompilerParams; support both.
+CompilerParams = getattr(_pltpu, "CompilerParams",
+                         getattr(_pltpu, "TPUCompilerParams", None))
+if CompilerParams is None:
+    def CompilerParams(**_kw):  # noqa: F811 — clear failure over NoneType
+        raise ImportError(
+            "jax.experimental.pallas.tpu exposes neither CompilerParams "
+            "nor TPUCompilerParams; unsupported jax version")

@@ -68,6 +68,6 @@ def bitonic_sort(keys: jnp.ndarray, interpret: bool | None = None):
         out_specs=pl.BlockSpec((1, L), lambda b: (b, 0)),
         out_shape=jax.ShapeDtypeStruct((B, L), jnp.int32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=K.CompilerParams(
             dimension_semantics=("parallel",)),
     )(keys)

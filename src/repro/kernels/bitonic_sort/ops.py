@@ -1,8 +1,9 @@
-"""Public wrappers for the bitonic sort kernel."""
+"""Public wrappers for the bitonic sort kernel + its stage-engine backend."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core import stages
 from repro.kernels.bitonic_sort.bitonic_sort import MAX_BLOCK, bitonic_sort
 
 _PAD = jnp.int32(0x7FFFFFFF)
@@ -33,3 +34,11 @@ def sort_batch(keys: jnp.ndarray) -> jnp.ndarray:
 def sort1d(keys: jnp.ndarray) -> jnp.ndarray:
     """keys: (L,) int32 ascending.  vmap-safe via expand/squeeze."""
     return sort_batch(keys.reshape(1, -1))[0]
+
+
+def _sort_pallas(state, cfg, index):
+    """Stage backend: anchor sort on the bitonic Sorter/Merger kernel."""
+    return stages.sort_with(state, cfg, index, sorter=sort1d)
+
+
+stages.register_backend("sort", stages.PALLAS, _sort_pallas)

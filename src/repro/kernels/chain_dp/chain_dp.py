@@ -99,7 +99,7 @@ def chain_dp_kernel(q: jnp.ndarray, t: jnp.ndarray, valid: jnp.ndarray, *,
             jax.ShapeDtypeStruct((R, A), jnp.int32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=K.CompilerParams(
             dimension_semantics=("parallel",)),
     )(q, t, valid.astype(jnp.int32))
     return f, d

@@ -1,8 +1,9 @@
-"""Public wrapper for the chaining-DP kernel."""
+"""Public wrapper for the chaining-DP kernel + its stage-engine backend."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core import stages
 from repro.core.config import MarsConfig
 from repro.kernels.chain_dp.chain_dp import chain_dp_kernel
 
@@ -15,3 +16,15 @@ def chain_dp(q: jnp.ndarray, t: jnp.ndarray, valid: jnp.ndarray,
         q.astype(jnp.int32), t.astype(jnp.int32), valid,
         B=cfg.chain_band, max_gap=cfg.max_gap, gap_cost=cfg.gap_cost,
         skip_cost=cfg.skip_cost, anchor_score=cfg.anchor_score)
+
+
+def _dp_pallas(state, cfg, index):
+    """Stage backend: banded chaining DP on the Pallas kernel (the kernel
+    is batch-level; the per-read stage adds/strips a unit batch dim, which
+    vmap batches away)."""
+    dp = lambda q, t, v: tuple(
+        x[0] for x in chain_dp(q[None], t[None], v[None], cfg))
+    return stages.dp_with(state, cfg, index, dp=dp)
+
+
+stages.register_backend("dp", stages.PALLAS, _dp_pallas)

@@ -134,7 +134,7 @@ def event_detect_fixed(xq: jnp.ndarray, *, E: int, w: int, tau2: int,
             jax.ShapeDtypeStruct((R, 1), jnp.int32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=K.CompilerParams(
             dimension_semantics=("parallel",)),
     )(xq.astype(jnp.int32))
     return means, nev.reshape(R)

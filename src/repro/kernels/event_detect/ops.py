@@ -4,6 +4,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core import events as ev
+from repro.core import stages
 from repro.core.config import MarsConfig
 from repro.kernels.event_detect.event_detect import event_detect_fixed
 
@@ -24,3 +25,16 @@ def event_detect(signals: jnp.ndarray, cfg: MarsConfig):
     return event_detect_fixed(
         xq, E=cfg.max_events, w=cfg.tstat_window, tau2=tau2, eps=eps,
         peak_r=cfg.peak_window, frac_bits=cfg.frac_bits)
+
+
+def _detect_pallas(state, cfg, index):
+    """Stage backend: fixed-point event detection on the Pallas kernel (the
+    kernel is batch-level; a unit batch dim is added per read and batched
+    away by vmap)."""
+    detector = lambda s: tuple(x[0] for x in event_detect(s[None], cfg))
+    return stages.detect_with(state, cfg, index, detector=detector)
+
+
+stages.register_backend(
+    "detect", stages.PALLAS, _detect_pallas,
+    supports=lambda cfg: cfg.fixed_point and cfg.early_quantization)

@@ -1,8 +1,9 @@
-"""Public wrapper for the pLUTo lookup kernel."""
+"""Public wrapper for the pLUTo lookup kernel + its stage-engine backend."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core import stages
 from repro.kernels.pluto_lookup.pluto_lookup import BQ, BT, pluto_lookup
 
 
@@ -28,3 +29,11 @@ def lookup(table: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
     ip = _pad_to(idx_flat, BQ, 0)
     out = pluto_lookup(tp, ip)[: idx_flat.shape[0]]
     return out.reshape(orig_shape).astype(orig_dtype)
+
+
+def _query_pallas(state, cfg, index):
+    """Stage backend: hash-table query with pLUTo-kernel gathers."""
+    return stages.query_with(state, cfg, index, gather=lookup)
+
+
+stages.register_backend("query", stages.PALLAS, _query_pallas)

@@ -75,7 +75,7 @@ def pluto_lookup(table: jnp.ndarray, idx: jnp.ndarray,
         out_specs=pl.BlockSpec((1, BQ), lambda qi, ti: (0, qi)),
         out_shape=jax.ShapeDtypeStruct((1, Q), jnp.int32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=K.CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
     )(idx.reshape(1, Q), table.reshape(1, N))
     return out.reshape(Q)

@@ -1,9 +1,10 @@
 """MARS read-mapping launcher — the paper-kind end-to-end driver.
 
-Streams raw-signal chunks from a container file (double-buffered reader =
-the flash/compute overlap), maps them with the jit pipeline, checkpoints
-progress (chunk index + partial results) so a killed job resumes where it
-stopped, and writes PAF-like output.
+Streams raw-signal chunks from a container file through the unified
+double-buffered driver (core/driver.py — reader prefetch + async device
+dispatch = the flash/compute overlap), checkpoints progress to an
+append-only JSONL log so a killed job resumes where it stopped, and
+writes PAF-like output.
 
     PYTHONPATH=src python -m repro.launch.map_reads --dataset D1 \
         --out /tmp/mars.paf --workdir /tmp/mars
@@ -11,14 +12,12 @@ stopped, and writes PAF-like output.
 from __future__ import annotations
 
 import argparse
-import json
 import pathlib
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import MarsConfig, Mapper, build_index, score_accuracy
+from repro.core import MarsConfig, Mapper, build_index, driver, score_accuracy
 from repro.signal import datasets, reader, simulate
 
 
@@ -52,14 +51,10 @@ def main(argv=None):
           f"index={index.n_entries} entries ({index.nbytes/1e6:.1f} MB) "
           f"{time.time()-t0:.1f}s")
 
-    # ---- resume state ------------------------------------------------------ #
-    state_file = wd / f"progress_{args.mode}.json"
-    start_chunk = 0
-    results = []
-    if state_file.exists():
-        st = json.loads(state_file.read_text())
-        start_chunk = st["next_chunk"]
-        results = [tuple(r) for r in st["results"]]
+    # ---- resume state (append-only JSONL, periodic compaction) ------------- #
+    progress = driver.ProgressLog(wd / f"progress_{args.mode}.jsonl")
+    start_chunk, results = progress.load()
+    if start_chunk:
         print(f"[resume] continuing at chunk {start_chunk}")
 
     mapper = Mapper(index, cfg, use_kernels=args.use_kernels)
@@ -67,14 +62,13 @@ def main(argv=None):
                               start_chunk=start_chunk)
     t0 = time.time()
     n_done = len(results)
-    for ci, n_valid, signals in rdr:
-        out = mapper.map_signals(signals, chunk=args.chunk)
-        for i in range(n_valid):
-            results.append((int(out.t_start[i]), float(out.score[i]),
-                            bool(out.mapped[i])))
+    stream = driver.stream_map(mapper.chunk_fn(), rdr)
+    for ci, n_valid, out in stream:
+        rows = [(int(out.t_start[i]), float(out.score[i]),
+                 bool(out.mapped[i])) for i in range(n_valid)]
+        progress.append(ci + 1, rows)      # also accumulates progress.rows
         n_done += n_valid
-        state_file.write_text(json.dumps(
-            dict(next_chunk=ci + 1, results=results)))
+    results = progress.rows
     dt = time.time() - t0
     print(f"[map] {n_done} reads in {dt:.1f}s "
           f"({n_done/max(dt,1e-9):.1f} reads/s)")
@@ -105,7 +99,7 @@ def main(argv=None):
                         f"{strand}\tref\t{Le}\t{fwd}\t"
                         f"{fwd + int(rs.n_bases[i])}\t{s:.1f}\t255\n")
         print(f"[out] PAF written to {args.out}")
-    state_file.unlink(missing_ok=True)
+    progress.clear()
     return acc
 
 

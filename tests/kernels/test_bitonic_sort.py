@@ -3,8 +3,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                       # deterministic fallback
+    from repro.testing import given, settings
+    from repro.testing import strategies as st
 
 from repro.kernels.bitonic_sort import ops, ref
 
@@ -27,6 +32,7 @@ def test_sort_vmap():
     np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
 
 
+@pytest.mark.slow
 @settings(max_examples=20, deadline=None)
 @given(st.lists(st.integers(-2**31, 2**31 - 2), min_size=1, max_size=300))
 def test_sort_is_ordered_permutation(xs):

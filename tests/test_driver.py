@@ -1,0 +1,99 @@
+"""Unified streaming driver: chunking, double-buffered streaming, resume."""
+import json
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import Mapper, driver, map_chunk
+
+
+def test_array_chunks_pad_and_trim():
+    sig = np.arange(10 * 4, dtype=np.float32).reshape(10, 4)
+    chunks = list(driver.array_chunks(sig, chunk=4))
+    assert [(ci, nv) for ci, nv, _ in chunks] == [(0, 4), (1, 4), (2, 2)]
+    assert all(c.shape == (4, 4) for _, _, c in chunks)
+    np.testing.assert_array_equal(chunks[2][2][2:], 0.0)   # zero pad
+    # resume skips already-done chunks
+    assert [ci for ci, _, _ in driver.array_chunks(sig, 4, start_chunk=2)] == [2]
+
+
+def test_stream_map_matches_direct_map(small_index, cfg_fixed, small_reads):
+    mapper = Mapper(small_index, cfg_fixed)
+    streamed = driver.collect(driver.stream_map(
+        mapper.chunk_fn(), driver.array_chunks(small_reads.signals, 5)))
+    direct = map_chunk(jnp.asarray(small_reads.signals), mapper.arrays,
+                       cfg_fixed)
+    np.testing.assert_array_equal(streamed.t_start, np.asarray(direct.t_start))
+    np.testing.assert_array_equal(streamed.mapped, np.asarray(direct.mapped))
+    for k, v in direct.counters.items():
+        assert streamed.counters[k] == int(v), k
+
+
+def test_stream_map_preserves_order_and_trims(small_index, cfg_fixed,
+                                              small_reads):
+    mapper = Mapper(small_index, cfg_fixed)
+    seen = list(driver.stream_map(
+        mapper.chunk_fn(), driver.array_chunks(small_reads.signals, 6)))
+    assert [ci for ci, _, _ in seen] == list(range(len(seen)))
+    assert [nv for _, nv, _ in seen] == [6, 6, 4]          # 16 reads
+    assert all(out.t_start.shape[0] == nv for _, nv, out in seen)
+
+
+def test_collect_empty_stream():
+    out = driver.collect(iter([]))
+    assert out.t_start.shape == (0,)
+    assert out.counters == {}
+
+
+def test_progress_log_append_and_resume(tmp_path):
+    log = driver.ProgressLog(tmp_path / "p.jsonl", compact_every=100)
+    assert log.load() == (0, [])
+    log.append(1, [(10, 1.5, True), (20, 0.0, False)])
+    log.append(2, [(30, 2.5, True)])
+    # a fresh instance (simulated restart) replays the log
+    log2 = driver.ProgressLog(tmp_path / "p.jsonl")
+    nxt, rows = log2.load()
+    assert nxt == 2
+    assert rows == [(10, 1.5, True), (20, 0.0, False), (30, 2.5, True)]
+    # file is line-per-append, not a rewritten blob
+    lines = (tmp_path / "p.jsonl").read_text().strip().splitlines()
+    assert len(lines) == 2
+    assert json.loads(lines[0])["next"] == 1
+
+
+def test_progress_log_compaction(tmp_path):
+    log = driver.ProgressLog(tmp_path / "p.jsonl", compact_every=3)
+    for ci in range(7):
+        log.append(ci + 1, [(ci, float(ci), True)])
+    lines = (tmp_path / "p.jsonl").read_text().strip().splitlines()
+    assert len(lines) < 7                     # compaction collapsed history
+    nxt, rows = driver.ProgressLog(tmp_path / "p.jsonl").load()
+    assert nxt == 7
+    assert rows == [(ci, float(ci), True) for ci in range(7)]
+
+
+def test_progress_log_torn_tail(tmp_path):
+    """A kill mid-append leaves a partial final line; load must recover
+    the consistent prefix and truncate the tear so appends stay clean."""
+    p = tmp_path / "p.jsonl"
+    log = driver.ProgressLog(p, compact_every=100)
+    log.append(1, [(10, 1.0, True)])
+    log.append(2, [(20, 2.0, True)])
+    data = p.read_bytes()
+    p.write_bytes(data[:-9])               # tear the last line
+    log2 = driver.ProgressLog(p)
+    nxt, rows = log2.load()
+    assert nxt == 1
+    assert rows == [(10, 1.0, True)]
+    log2.append(2, [(21, 2.5, False)])     # re-mapped chunk appends cleanly
+    nxt, rows = driver.ProgressLog(p).load()
+    assert nxt == 2
+    assert rows == [(10, 1.0, True), (21, 2.5, False)]
+
+
+def test_progress_log_clear(tmp_path):
+    log = driver.ProgressLog(tmp_path / "p.jsonl")
+    log.append(1, [(0, 0.0, False)])
+    log.clear()
+    assert not (tmp_path / "p.jsonl").exists()
+    assert log.load() == (0, [])

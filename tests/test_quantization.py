@@ -1,8 +1,14 @@
-"""Quantization property tests (hypothesis)."""
+"""Quantization property tests (hypothesis, with deterministic fallback)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                       # deterministic fallback
+    from repro.testing import given, settings
+    from repro.testing import strategies as st
 
 from repro.core import quantization as Q
 from repro.core.config import MarsConfig
@@ -10,6 +16,7 @@ from repro.core.config import MarsConfig
 CFG = MarsConfig()
 
 
+@pytest.mark.slow
 @settings(max_examples=25, deadline=None)
 @given(st.lists(st.floats(-5, 5, allow_nan=False), min_size=8, max_size=64))
 def test_symbols_in_range(vals):
@@ -21,6 +28,7 @@ def test_symbols_in_range(vals):
         assert ((sym >= 0) & (sym < cfg.quant_levels)).all()
 
 
+@pytest.mark.slow
 @settings(max_examples=25, deadline=None)
 @given(st.integers(0, 10_000))
 def test_monotone_in_input(seed):
@@ -32,6 +40,7 @@ def test_monotone_in_input(seed):
     assert (np.diff(sym) >= 0).all()
 
 
+@pytest.mark.slow
 @settings(max_examples=20, deadline=None)
 @given(st.integers(0, 10_000))
 def test_fixed_matches_float_mostly(seed):
