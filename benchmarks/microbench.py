@@ -1,0 +1,197 @@
+"""Persistent per-stage-group microbenchmark of the mapping pipeline.
+
+Times warmed-up, jit-compiled wall clock for one ``map_chunk`` workload,
+split by stage group:
+
+    cheap         detect -> quantize -> seed -> query -> vote (every read)
+    chain_fast    the filter-aware chaining fast path of core/pipeline.py
+                  (read compaction + select-then-sort width ladder +
+                  ring-buffer banded DP) on the cheap phase's real outputs
+    chain_pre     the pre-fast-path chaining implementation on the SAME
+                  inputs: full E*H anchor sort + dynamic-slice banded DP
+                  (chaining.sort_anchors_reference / chain_dp_reference)
+    map_chunk     the full fused chunk program (fast path on)
+    map_chunk_pre the full chunk program with chain_compaction disabled
+
+``scripts/bench_pipeline.py`` drives this and appends the results to
+``BENCH_pipeline.json`` at the repo root so every PR records the perf
+trajectory (see EXPERIMENTS.md).
+
+All timings are min-over-repeats of a blocking call AFTER a warm-up call,
+so compile time is excluded and cache effects are steady-state.
+"""
+from __future__ import annotations
+
+import subprocess
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import MarsConfig, build_index, chaining, stages
+from repro.core import pipeline
+from repro.core.index import index_arrays
+from repro.signal import simulate
+
+
+def git_sha() -> str:
+    try:
+        return subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                              capture_output=True, text=True,
+                              timeout=10).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def time_fn(fn, *args, repeats: int = 5) -> float:
+    """Min-of-repeats wall seconds for ``fn(*args)``; one warm-up call first
+    (compiles + primes caches)."""
+    jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def make_workload(n_reads: int = 32, ref_events: int = 20_000,
+                  junk_frac: float = 0.5, seed: int = 0):
+    """One benchmark chunk: a synthetic reference + a read mix where
+    ``junk_frac`` of the reads are unmappable noise (the population the
+    filters — and therefore the compaction gate — are built for)."""
+    cfg = MarsConfig(hash_bits=14).with_mode("ms_fixed")
+    ref = simulate.make_reference(ref_events, seed=seed)
+    reads = simulate.sample_reads(ref, n_reads, signal_len=cfg.signal_len,
+                                  seed=seed + 1, junk_frac=junk_frac)
+    idx = build_index(ref.events_concat, ref.n_events, cfg)
+    arrays = {k: jnp.asarray(v) for k, v in index_arrays(idx).items()}
+    return cfg, jnp.asarray(reads.signals), arrays
+
+
+def _chain_programs(cfg: MarsConfig, signals, arrays, backend: str):
+    """Jit the cheap phase and the pre/fast chaining programs of one
+    backend; returns (cheap_call, fast_call, pre_call) where the chain
+    calls are argless closures over the cheap phase's real outputs."""
+    plan = stages.resolve_plan(cfg, backend)
+    prims = stages.chain_primitives(plan, cfg)
+    if prims is None:
+        raise ValueError(
+            f"backend {backend!r} resolves to a plan whose chain stages "
+            "expose no primitives; the chaining microbenchmark cannot "
+            f"time it (plan: {plan})")
+    sorter, dp = prims
+
+    cheap_j = jax.jit(
+        lambda s: pipeline.cheap_phase(s, arrays, cfg, plan))
+    q_pos, t_pos, hv, counters = cheap_j(signals)
+    cnt = counters["n_anchors_postvote"]
+
+    fast_j = jax.jit(lambda qp, tp, h, c: pipeline._chain_outputs(
+        qp, tp, h, c, cfg, prims))
+
+    def pre_read(qp, tp, h):
+        # the pre-fast-path chain program: full-width sort + the
+        # dynamic-slice reference DP ("pre" side of the speedup claim).
+        # For accelerated backends the sort still runs on the backend's
+        # sorter (full width); the reference DP is the pre-PR algorithm.
+        sq, st, sv = chaining.sort_anchors_reference(qp, tp, h, cfg,
+                                                     sorter=sorter)
+        if backend == stages.REFERENCE:
+            f, d = chaining.chain_dp_reference(sq, st, sv, cfg)
+        else:
+            f, d = dp(sq, st, sv)
+        res = chaining.best_chain(f, d, sv, cfg)
+        return res.t_start, res.score, res.mapped
+
+    pre_j = jax.jit(lambda qp, tp, h: jax.vmap(pre_read)(qp, tp, h))
+
+    return (lambda: cheap_j(signals),
+            lambda: fast_j(q_pos, t_pos, hv, cnt),
+            lambda: pre_j(q_pos, t_pos, hv))
+
+
+def _interleaved(fast_c, pre_c, rounds: int):
+    """Paired pre/fast timing: both programs per round, so machine-speed
+    swings between rounds hit both equally.  Returns (min fast, min pre,
+    median per-round pre/fast ratio) — the median paired ratio is stable
+    to a few % where separately-measured absolute times swing ~40% on a
+    shared CPU."""
+    jax.block_until_ready(fast_c())
+    jax.block_until_ready(pre_c())
+    tf = tp = float("inf")
+    ratios = []
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fast_c())
+        tf_k = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        jax.block_until_ready(pre_c())
+        tp_k = time.perf_counter() - t0
+        tf, tp = min(tf, tf_k), min(tp, tp_k)
+        ratios.append(tp_k / tf_k)
+    return tf, tp, float(np.median(ratios))
+
+
+def bench_backend(cfg: MarsConfig, signals, arrays, backend: str,
+                  repeats: int = 5) -> Dict[str, float]:
+    """Stage-group timings (seconds) for one registry backend."""
+    cheap_c, fast_c, pre_c = _chain_programs(cfg, signals, arrays, backend)
+    plan = stages.resolve_plan(cfg, backend)
+    chunk_j = lambda: pipeline.map_chunk(signals, arrays, cfg, plan=plan)
+    cfg_pre = cfg.replace(chain_compaction=False)
+    plan_pre = stages.resolve_plan(cfg_pre, backend)
+    chunk_pre_j = lambda: pipeline.map_chunk(signals, arrays, cfg_pre,
+                                             plan=plan_pre)
+
+    tf, tp, ratio = _interleaved(fast_c, pre_c, rounds=max(3 * repeats, 15))
+    groups = {
+        "cheap": time_fn(cheap_c, repeats=repeats),
+        "chain_fast": tf,
+        "chain_pre": tp,
+        "chain_speedup": ratio,
+        "map_chunk": time_fn(chunk_j, repeats=repeats),
+        "map_chunk_pre": time_fn(chunk_pre_j, repeats=repeats),
+    }
+    return groups
+
+
+def bench_chain_ratio(cfg: MarsConfig, signals, arrays,
+                      backend: str = stages.REFERENCE,
+                      rounds: int = 25) -> Dict[str, float]:
+    """Machine-speed-independent chaining measurement for the regression
+    gate.
+
+    Absolute ms are not comparable across runs on a shared/containerized
+    CPU (whole-process speed swings ~1.5x), so the pre and fast chain
+    programs are timed in INTERLEAVED rounds — each round yields a paired
+    pre/fast ratio under the same instantaneous machine state — and the
+    MEDIAN of the per-round ratios is the estimator (stable to ~3% across
+    processes where min-of-N absolute times swing ~40%)."""
+    _, fast_c, pre_c = _chain_programs(cfg, signals, arrays, backend)
+    tf, tp, ratio = _interleaved(fast_c, pre_c, rounds)
+    return {"chain_fast_min": tf, "chain_pre_min": tp, "rounds": rounds,
+            "chain_speedup_median": ratio}
+
+
+def run(n_reads: int = 32, ref_events: int = 20_000, junk_frac: float = 0.5,
+        repeats: int = 5, backends=(stages.REFERENCE, stages.PALLAS),
+        seed: int = 0) -> Dict:
+    cfg, signals, arrays = make_workload(n_reads, ref_events, junk_frac, seed)
+    rec = {
+        "git_sha": git_sha(),
+        "workload": dict(n_reads=n_reads, ref_events=ref_events,
+                         junk_frac=junk_frac, repeats=repeats, seed=seed,
+                         signal_len=cfg.signal_len,
+                         max_anchors=cfg.max_anchors,
+                         chain_band=cfg.chain_band,
+                         chain_widths=list(cfg.chain_widths),
+                         chain_capacity_frac=cfg.chain_capacity_frac),
+        "backends": {},
+    }
+    for b in backends:
+        rec["backends"][b] = bench_backend(cfg, signals, arrays, b,
+                                           repeats=repeats)
+    return rec

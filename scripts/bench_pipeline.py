@@ -1,0 +1,141 @@
+#!/usr/bin/env python
+"""Measure the mapping pipeline's per-stage-group timings and persist them
+to BENCH_pipeline.json at the repo root (the per-PR perf trajectory file).
+
+    scripts/bench_pipeline.py             # measure quick + full profiles
+    scripts/bench_pipeline.py --quick     # measure the quick profile only
+    scripts/bench_pipeline.py --check     # quick measurement, compared to
+                                          # the committed baseline: exits 1
+                                          # if the chaining-phase time
+                                          # regressed > 20% (skips cleanly
+                                          # when no baseline exists)
+
+Profiles are compared like-for-like (quick vs quick), so --check is immune
+to the workload-size difference between profiles.  See EXPERIMENTS.md for
+how to read the file.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "src"))
+sys.path.insert(0, str(REPO))
+
+DEFAULT_OUT = REPO / "BENCH_pipeline.json"
+
+PROFILES = {
+    "quick": dict(n_reads=16, ref_events=8_000, junk_frac=0.5, repeats=5),
+    "full": dict(n_reads=32, ref_events=20_000, junk_frac=0.5, repeats=7),
+}
+
+REGRESSION_TOL = 1.20      # --check fails beyond +20% chain-phase time
+CHECK_BACKEND = "reference"     # backend whose chain_gate ratio is gated
+CHECK_REPEATS = 25
+
+
+def measure(profiles, **kw):
+    from benchmarks import microbench
+    out = {}
+    for name in profiles:
+        params = {**PROFILES[name], **kw}
+        print(f"[bench_pipeline] measuring profile {name!r} "
+              f"({params}) ...", flush=True)
+        out[name] = microbench.run(**params)
+        ref = out[name]["backends"]["reference"]
+        print(f"[bench_pipeline] {name}: chain_pre={ref['chain_pre']*1e3:.2f}ms "
+              f"chain_fast={ref['chain_fast']*1e3:.2f}ms "
+              f"speedup={ref['chain_speedup']:.2f}x", flush=True)
+    return out
+
+
+def write(path: pathlib.Path, measured) -> None:
+    # each profile record carries its own git_sha (stamped by
+    # microbench.run), so profiles retained from an earlier run keep the
+    # SHA they were actually measured at
+    rec = {"schema": 1, "profiles": {}}
+    if path.exists():
+        try:
+            old = json.loads(path.read_text())
+            rec["profiles"] = old.get("profiles", {})
+        except json.JSONDecodeError:
+            pass
+    rec["created_unix"] = int(time.time())
+    rec["profiles"].update(measured)
+    path.write_text(json.dumps(rec, indent=2, sort_keys=True) + "\n")
+    print(f"[bench_pipeline] wrote {path}")
+
+
+def measure_gate():
+    """The interleaved pre/fast chaining ratio on the quick workload (the
+    machine-speed-independent gate metric; see microbench.bench_chain_ratio).
+    """
+    from benchmarks import microbench
+    params = PROFILES["quick"]
+    print(f"[bench_pipeline] measuring interleaved chain pre/fast ratio "
+          f"({params}) ...", flush=True)
+    cfg, signals, arrays = microbench.make_workload(
+        params["n_reads"], params["ref_events"], params["junk_frac"])
+    rec = microbench.bench_chain_ratio(cfg, signals, arrays, CHECK_BACKEND,
+                                       rounds=CHECK_REPEATS)
+    rec["backend"] = CHECK_BACKEND
+    return rec
+
+
+def check(path: pathlib.Path) -> int:
+    """Regression gate on the chaining phase, machine-speed independent:
+    compares the median interleaved chain_pre/chain_fast speedup ratio
+    against the baseline's identically-measured ``chain_gate`` record.
+    A >20% rise in normalized chaining-phase time fails."""
+    if not path.exists():
+        print(f"[bench_pipeline] no baseline at {path}; skipping "
+              "regression check")
+        return 0
+    base = json.loads(path.read_text())
+    prof = base.get("profiles", {}).get("quick", {})
+    gate = prof.get("chain_gate")
+    if not gate:
+        print("[bench_pipeline] baseline has no quick 'chain_gate' record; "
+              "skipping")
+        return 0
+    baseline = gate["chain_speedup_median"]
+    cur = measure_gate()
+    ratio = baseline / cur["chain_speedup_median"]  # >1: normalized time grew
+    print(f"[bench_pipeline] chain speedup ({cur['backend']}): baseline "
+          f"{baseline:.2f}x, current {cur['chain_speedup_median']:.2f}x "
+          f"-> normalized chain time {ratio:.2f}x")
+    if ratio > REGRESSION_TOL:
+        print(f"[bench_pipeline] FAIL: chaining phase regressed "
+              f">{(REGRESSION_TOL - 1) * 100:.0f}%")
+        return 1
+    print("[bench_pipeline] OK")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="measure only the quick profile")
+    ap.add_argument("--check", action="store_true",
+                    help="compare a quick measurement against the committed "
+                         "baseline instead of writing it")
+    ap.add_argument("--out", type=pathlib.Path, default=DEFAULT_OUT)
+    args = ap.parse_args(argv)
+
+    if args.check:
+        return check(args.out)
+    profiles = ("quick",) if args.quick else ("quick", "full")
+    measured = measure(profiles)
+    # every write refreshes the gate baseline with the same interleaved
+    # estimator --check uses, so the comparison is like-for-like
+    measured["quick"]["chain_gate"] = measure_gate()
+    write(args.out, measured)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -3,14 +3,29 @@
 #
 #   scripts/run_tier1.sh            # fast pass (skips @slow property sweeps)
 #   scripts/run_tier1.sh --all      # everything, including @slow
+#   scripts/run_tier1.sh --bench    # fast pass + chaining-phase perf gate:
+#                                   # runs scripts/bench_pipeline.py --check
+#                                   # (quick profile) and fails on a >20%
+#                                   # regression vs the committed
+#                                   # BENCH_pipeline.json (skips cleanly
+#                                   # when no baseline exists)
 #   scripts/run_tier1.sh tests/test_pipeline.py   # extra pytest args pass through
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 MARKER=(-m "not slow")
-if [[ "${1:-}" == "--all" ]]; then
-    MARKER=()
+BENCH=0
+while [[ "${1:-}" == "--all" || "${1:-}" == "--bench" ]]; do
+    case "$1" in
+        --all)   MARKER=() ;;
+        --bench) BENCH=1 ;;
+    esac
     shift
+done
+
+python -m pytest -x -q "${MARKER[@]}" "$@"
+
+if [[ "$BENCH" == 1 ]]; then
+    python scripts/bench_pipeline.py --check
 fi
-exec python -m pytest -x -q "${MARKER[@]}" "$@"

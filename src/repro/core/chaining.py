@@ -10,6 +10,25 @@ word-serial, so RawHash2's bounded-predecessor heuristic maps directly).
                                               - alpha*min(dt, dq))
 
 The best chain's projected start (t_start - q_start) is the mapping position.
+
+Fast path (this module + core/pipeline.py): MARS's filters exist so that
+most reads reach chaining with few (often zero) anchors.  The chaining fast
+path exploits that:
+
+  * ``select_smallest_count`` / ``select_smallest_topk`` pull the W smallest
+    packed keys out of the (E*H,) key array so the sorter runs on W keys
+    instead of E*H ("select-then-sort" — the Pallas bitonic backend then
+    sorts a W-slot block instead of the padded full block);
+  * ``chain_dp`` carries only the B-slot band window as a ring buffer
+    (fixed-position rotate/update) instead of dynamic-slicing a full
+    (A+B,) array every scan step — the whole-array gather/scatter the old
+    scan made vmap materialize per read is gone;
+  * zero-anchor reads short-circuit to ``empty_chain_result`` (exactly what
+    the full pipeline computes for them — see the proof in the docstring).
+
+``sort_anchors_reference`` and ``chain_dp_reference`` keep the pre-fast-path
+implementations: they are the parity oracles for the tests and the "pre"
+side of benchmarks/microbench.py.
 """
 from __future__ import annotations
 
@@ -21,12 +40,15 @@ import jax.numpy as jnp
 from repro.core.config import MarsConfig
 
 NEG = -1e9
+_SENT = -(1 << 30)
 _INVALID_KEY = jnp.int32(0x7FFFFFFF)
 # packed sort key: [t_pos : 23 bits | q_pos : 8 bits] in a non-negative
-# int32 — requires the double genome to have < 2^23 events and
-# max_events <= 256 (checked at index build time; our scaled datasets are
-# far below).  int32 keys are what the bitonic Pallas kernel sorts.
+# int32 — requires the double genome to have < 2^(31-8) = 2^23 events and
+# max_events <= 2^8 = 256 (both checked at index build time; our scaled
+# datasets are far below).  int32 keys are what the bitonic Pallas kernel
+# sorts.
 _Q_BITS = 8
+T_BITS = 31 - _Q_BITS          # 23: t_pos field width (index.py guard)
 
 
 class ChainResult(NamedTuple):
@@ -37,43 +59,162 @@ class ChainResult(NamedTuple):
     n_anchors: jnp.ndarray   # () int32 anchors entering the DP
 
 
-def sort_anchors(q_pos: jnp.ndarray, t_pos: jnp.ndarray, valid: jnp.ndarray,
-                 cfg: MarsConfig, sorter=None):
-    """Flatten (E,H) anchors, sort by (t_pos, q_pos) with invalids last, and
-    keep the first `max_anchors`.  `sorter(keys) -> sorted_keys` is injectable
-    (Pallas bitonic kernel); default jnp.sort.
-
-    Packs (t_pos, q_pos) into a uint32 key [t:24 | q:8] so the sort is a
-    single-key sort (what the in-controller bitonic Sorter consumes).
-    """
-    if sorter is None:
-        sorter = jnp.sort
+# --------------------------------------------------------------------------- #
+# Key packing / selection
+# --------------------------------------------------------------------------- #
+def pack_anchor_keys(q_pos: jnp.ndarray, t_pos: jnp.ndarray,
+                     valid: jnp.ndarray) -> jnp.ndarray:
+    """Flatten (E,H) anchors into (E*H,) packed sort keys [t:23 | q:8];
+    invalid anchors become ``_INVALID_KEY`` (sorts last)."""
     t = t_pos.reshape(-1).astype(jnp.int32)
     q = jnp.minimum(q_pos.reshape(-1), (1 << _Q_BITS) - 1).astype(jnp.int32)
     v = valid.reshape(-1)
     key = (t << _Q_BITS) | q
-    key = jnp.where(v, key, _INVALID_KEY)
-    skey = sorter(key)[: cfg.max_anchors]
+    return jnp.where(v, key, _INVALID_KEY)
+
+
+def decode_anchor_keys(skey: jnp.ndarray):
+    """Inverse of ``pack_anchor_keys`` on a sorted key array: (sq, st, sv)."""
     sv = skey != _INVALID_KEY
     st = (skey >> _Q_BITS).astype(jnp.int32)
     sq = (skey & ((1 << _Q_BITS) - 1)).astype(jnp.int32)
     return sq, st, sv
 
 
+def select_smallest_count(key: jnp.ndarray, width: int) -> jnp.ndarray:
+    """The valid entries of ``key`` compacted to a (width,) array, padded
+    with ``_INVALID_KEY``.
+
+    Gather-based (cumsum + searchsorted): no scatter, so it vmaps into one
+    batched gather.  EXACT equivalent of ``sort(key)[:width]`` as a multiset
+    iff the number of valid keys is <= width — callers guarantee that with a
+    batch-level ``n_anchors_postvote`` bound (core/pipeline.py) before
+    taking this path.
+    """
+    valid = key != _INVALID_KEY
+    cum = jnp.cumsum(valid.astype(jnp.int32))
+    idx = jnp.searchsorted(cum, jnp.arange(1, width + 1, dtype=jnp.int32),
+                           side="left")
+    got = key[jnp.minimum(idx, key.shape[0] - 1)]
+    return jnp.where(jnp.arange(width) < cum[-1], got, _INVALID_KEY)
+
+
+def select_smallest_topk(key: jnp.ndarray, width: int) -> jnp.ndarray:
+    """The ``width`` smallest keys, ascending, via ``lax.top_k`` on the
+    negated keys.  Exact for ANY valid count (true smallest-k selection);
+    on TPU top_k is a fast sampled-select, on CPU XLA lowers it to an
+    O(n*k) pass — cfg.anchor_select picks the strategy."""
+    neg = jax.lax.top_k(-key, width)[0]      # descending in -key
+    return -neg                               # ascending in key
+
+
+_SELECTORS = {
+    "count": select_smallest_count,
+    "topk": select_smallest_topk,
+}
+
+
+def sort_anchors(q_pos: jnp.ndarray, t_pos: jnp.ndarray, valid: jnp.ndarray,
+                 cfg: MarsConfig, sorter=None, width: int = None):
+    """Sort (E,H) anchors by (t_pos, q_pos) with invalids last and keep the
+    first ``max_anchors``.  ``sorter(keys) -> sorted_keys`` is injectable
+    (Pallas bitonic kernel); default jnp.sort.
+
+    Packs (t_pos, q_pos) into an int32 key [t:23 | q:8] so the sort is a
+    single-key sort (what the in-controller bitonic Sorter consumes).
+
+    ``width=None`` sorts all E*H keys (the original full-sort behaviour).
+    ``width=W`` is the select-then-sort fast path: the W smallest keys are
+    selected first (strategy ``cfg.anchor_select``) and the sorter runs on
+    the (W,) selection only — bit-identical to the full sort's first W slots
+    provided the post-filter anchor count is <= W ("count" strategy) or
+    unconditionally ("topk" strategy).
+    """
+    if sorter is None:
+        sorter = jnp.sort
+    key = pack_anchor_keys(q_pos, t_pos, valid)
+    if width is None:
+        skey = sorter(key)[: cfg.max_anchors]
+    else:
+        sel = _SELECTORS[cfg.anchor_select](key, width)
+        skey = sorter(sel)
+    return decode_anchor_keys(skey)
+
+
+def sort_anchors_reference(q_pos, t_pos, valid, cfg: MarsConfig, sorter=None):
+    """Pre-fast-path behaviour: always full-sort all E*H keys (parity oracle
+    + "pre" side of the chaining microbenchmark)."""
+    return sort_anchors(q_pos, t_pos, valid, cfg, sorter=sorter, width=None)
+
+
+# --------------------------------------------------------------------------- #
+# Banded DP
+# --------------------------------------------------------------------------- #
 def chain_dp(q: jnp.ndarray, t: jnp.ndarray, valid: jnp.ndarray,
              cfg: MarsConfig):
-    """Banded DP over sorted anchors.
+    """Banded DP over sorted anchors — ring-buffer band window.
 
     q, t: (A,) int32 sorted by (t, q); valid: (A,) bool.
     Returns (f (A,) f32 chain scores, diag0 (A,) int32 start diag of the best
     chain ending at each anchor).
+
+    The carried state is ONLY the B-slot band (f/diag/t/q of the last B
+    anchors), held in a ring buffer: anchor i lives in slot i % B and each
+    step overwrites exactly one fixed-position slot with a lane-mask select —
+    no dynamic_slice gather of an (A+B,) array per step (which vmap turned
+    into a whole-array gather/scatter per read in the old scan; see
+    ``chain_dp_reference``).  Outputs stream out as scan ys.
+
+    Bit-identical to ``chain_dp_reference``: the band holds the same values
+    (only slot order differs — a rotation), the float expressions are
+    verbatim the same, and argmax ties resolve to the OLDEST anchor in both
+    (the reference window is age-ordered; here the explicit age rank
+    ``k = (slot - i) mod B`` reproduces that tie-break).
     """
+    A, B = q.shape[0], cfg.chain_band
+    lane = jnp.arange(B)
+
+    def step(carry, x):
+        bf, bd, bt, bq = carry
+        ti, qi, vi, i = x
+        dt = ti - bt
+        dq = qi - bq
+        ok = (dt > 0) & (dq > 0) & (dt <= cfg.max_gap) & (dq <= cfg.max_gap)
+        gap = jnp.abs(dt - dq).astype(jnp.float32)
+        skip = jnp.minimum(dt, dq).astype(jnp.float32)
+        cand = bf - cfg.gap_cost * gap - cfg.skip_cost * skip
+        cand = jnp.where(ok & (bf > NEG / 2), cand, NEG)
+        best = jnp.max(cand)
+        # oldest-first tie-break: age rank k=0 is the oldest band slot
+        k = (lane - i) % B
+        kbest = jnp.min(jnp.where(cand == best, k, B))
+        dbest = jnp.sum(jnp.where((cand == best) & (k == kbest), bd, 0))
+        ext = best > 0.0
+        fi = cfg.anchor_score + jnp.maximum(best, 0.0)
+        fi = jnp.where(vi, fi, NEG)
+        di = jnp.where(ext, dbest, ti - qi)
+        wr = lane == i % B
+        carry = (jnp.where(wr, fi, bf), jnp.where(wr, di, bd),
+                 jnp.where(wr, ti, bt), jnp.where(wr, qi, bq))
+        return carry, (fi, di)
+
+    init = (jnp.full((B,), NEG, jnp.float32), jnp.zeros((B,), jnp.int32),
+            jnp.full((B,), _SENT, jnp.int32), jnp.full((B,), _SENT, jnp.int32))
+    _, (f, d) = jax.lax.scan(step, init, (t, q, valid, jnp.arange(A)))
+    return f, d
+
+
+def chain_dp_reference(q: jnp.ndarray, t: jnp.ndarray, valid: jnp.ndarray,
+                       cfg: MarsConfig):
+    """Pre-fast-path DP: carries full (A+B,) f/diag arrays and dynamic-slices
+    the band window each step.  Kept as the parity oracle for ``chain_dp``
+    and the "pre" side of the chaining microbenchmark."""
     A, B = q.shape[0], cfg.chain_band
     # pad the carried state with B sentinel slots in front
     f0 = jnp.full(A + B, NEG, jnp.float32)
     d0 = jnp.zeros(A + B, jnp.int32)
-    tp = jnp.concatenate([jnp.full(B, -(1 << 30), jnp.int32), t])
-    qp = jnp.concatenate([jnp.full(B, -(1 << 30), jnp.int32), q])
+    tp = jnp.concatenate([jnp.full(B, _SENT, jnp.int32), t])
+    qp = jnp.concatenate([jnp.full(B, _SENT, jnp.int32), q])
 
     def step(carry, i):
         f, d = carry
@@ -103,6 +244,9 @@ def chain_dp(q: jnp.ndarray, t: jnp.ndarray, valid: jnp.ndarray,
     return f[B:], d[B:]
 
 
+# --------------------------------------------------------------------------- #
+# Finalize
+# --------------------------------------------------------------------------- #
 def best_chain(f: jnp.ndarray, diag0: jnp.ndarray, valid: jnp.ndarray,
                cfg: MarsConfig) -> ChainResult:
     """Best + second-best (distinct window) chain -> mapping decision."""
@@ -117,6 +261,31 @@ def best_chain(f: jnp.ndarray, diag0: jnp.ndarray, valid: jnp.ndarray,
     t_start = jnp.maximum(d1, 0).astype(jnp.int32)
     return ChainResult(t_start=t_start, score=s1, score2=s2, mapped=mapped,
                        n_anchors=valid.sum().astype(jnp.int32))
+
+
+def empty_chain_result(cfg: MarsConfig) -> ChainResult:
+    """The EXACT ChainResult the full sort+dp+finalize pipeline produces for
+    a read with zero valid anchors — in closed form.
+
+    With no valid anchors every sorted slot holds ``_INVALID_KEY``; the DP
+    gives every slot f = NEG (invalid) and diag = t - q of the decoded
+    sentinel (its huge t fails the ``dt <= max_gap`` colinearity test against
+    every predecessor, so no extension can fire).  best_chain then sees an
+    all-NEG score vector: argmax lands on slot 0, the second-best window is
+    empty, and the result is a constant independent of A.  The read-
+    compaction gate (core/pipeline.py) uses this to finalize filtered-out
+    reads without running the chaining phase.
+    """
+    st = int(_INVALID_KEY) >> _Q_BITS
+    sq = (1 << _Q_BITS) - 1
+    d = st - sq
+    return ChainResult(
+        t_start=jnp.int32(max(d, 0)),
+        score=jnp.float32(NEG),
+        score2=jnp.float32(0.0),
+        mapped=jnp.asarray(False),
+        n_anchors=jnp.int32(0),
+    )
 
 
 def chain_anchors(q_pos: jnp.ndarray, t_pos: jnp.ndarray, valid: jnp.ndarray,

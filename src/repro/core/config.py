@@ -65,6 +65,12 @@ class MarsConfig:
     min_chain_score: float = 4.0    # report threshold
     map_ratio: float = 1.25         # best/second-best score ratio to call unique
 
+    # ---- chaining fast path (filter-aware; core/pipeline.py) -----------------------
+    chain_compaction: bool = True   # gate chaining to reads with anchors left
+    chain_capacity_frac: float = 0.75  # compacted chain batch = ceil(frac * R)
+    chain_widths: Tuple[int, ...] = (64, 128)  # select-then-sort width ladder
+    anchor_select: str = "count"    # smallest-key selection: "count" | "topk"
+
     # ---- bookkeeping ----------------------------------------------------------------
     mode: str = MODE_MS_FIXED
 

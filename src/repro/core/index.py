@@ -20,7 +20,7 @@ import dataclasses
 import numpy as np
 
 from repro.core.config import MarsConfig
-from repro.core import hashing
+from repro.core import chaining, hashing
 
 
 @dataclasses.dataclass
@@ -53,13 +53,20 @@ def quantize_reference_events(events: np.ndarray, cfg: MarsConfig) -> np.ndarray
 def build_index(ref_events_concat: np.ndarray, n_ref_events: int,
                 cfg: MarsConfig) -> Index:
     """ref_events_concat: (2*Le,) f32 — forward ++ reverse expected events."""
-    if ref_events_concat.shape[0] >= (1 << 23):
+    # overflow guard for the packed anchor sort key [t : T_BITS | q : Q_BITS]
+    # (chaining.pack_anchor_keys): every t_pos (double-genome coordinate,
+    # < 2*Le) must fit the t field of a NON-NEGATIVE int32, i.e.
+    # n_ref_events < 2^(31 - _Q_BITS) / 2 per strand.
+    if ref_events_concat.shape[0] >= (1 << chaining.T_BITS):
         raise ValueError(
-            "double genome must stay under 2^23 events so (t_pos, q_pos) "
-            "packs into a non-negative int32 sort key (chaining.py); shard "
-            "larger references across the model axis instead.")
-    if cfg.max_events > (1 << 8):
-        raise ValueError("max_events must fit the 8-bit q_pos field")
+            f"double genome must stay under 2^{chaining.T_BITS} events so "
+            "(t_pos, q_pos) packs into a non-negative int32 sort key "
+            "(chaining.pack_anchor_keys); shard larger references across "
+            "the model axis instead.")
+    if cfg.max_events > (1 << (31 - chaining.T_BITS)):
+        raise ValueError(
+            f"max_events must fit the {31 - chaining.T_BITS}-bit q_pos "
+            "field of the packed anchor sort key")
     sym = quantize_reference_events(ref_events_concat.astype(np.float64), cfg)
     keys = hashing.pack_seeds_np(sym, cfg)                 # (2Le - w + 1,)
     pos = np.arange(keys.shape[0], dtype=np.int64)

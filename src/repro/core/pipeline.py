@@ -31,12 +31,13 @@ from __future__ import annotations
 from typing import Dict, NamedTuple, Optional
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import driver, stages
+from repro.core import chaining, driver, stages
 from repro.core.config import MarsConfig
 from repro.core.index import Index, index_arrays
 
@@ -57,20 +58,161 @@ def map_read(signal: jnp.ndarray, index: Dict[str, jnp.ndarray],
     return stages.execute_read(signal, index, cfg, plan)
 
 
+# --------------------------------------------------------------------------- #
+# Filter-aware chaining fast path
+# --------------------------------------------------------------------------- #
+def cheap_phase(signals: jnp.ndarray, index: Dict[str, jnp.ndarray],
+                cfg: MarsConfig, plan: stages.Plan):
+    """vmap CHEAP_STAGES (detect..vote) over a chunk.
+
+    Returns (q_pos (R,E,H), t_pos (R,E,H), hit_valid (R,E,H),
+    per-read counters dict) — everything the chaining phase and the chunk
+    counter schema need.  ``counters["n_anchors_postvote"]`` is the per-read
+    post-filter anchor count the compaction gate keys on.
+    """
+    def one(signal):
+        state = stages.execute_stages({"signal": signal, "counters": {}},
+                                      index, cfg, plan, stages.CHEAP_STAGES)
+        return (state["q_pos"], state["t_pos"], state["hit_valid"],
+                state["counters"])
+    return jax.vmap(one)(signals)
+
+
+def _chain_widths(cfg: MarsConfig, n_keys: int):
+    """The select-then-sort width ladder: configured widths that actually
+    shrink the sorted array, ascending, deduplicated."""
+    full = min(cfg.max_anchors, n_keys)
+    return tuple(sorted({w for w in cfg.chain_widths if 0 < w < full}))
+
+
+def chain_phase(q_pos: jnp.ndarray, t_pos: jnp.ndarray, hit_valid: jnp.ndarray,
+                cnt: jnp.ndarray, cfg: MarsConfig, prims) -> tuple:
+    """The batched chaining phase (sort -> dp -> finalize) over N reads.
+
+    Runs at the smallest width W of ``cfg.chain_widths`` that bounds every
+    active read's post-vote anchor count (``cnt``), falling back to the
+    original full-sort path when none does: with cnt <= W the W smallest
+    packed keys are ALL surviving anchors, so select-then-sort at width W,
+    the banded DP over W slots and best_chain over W slots are bit-identical
+    to the full-width pipeline (the truncated tail holds only invalid
+    sentinel slots, which the DP maps to (NEG, const) and best_chain masks).
+    The width choice is a batch-level runtime branch (lax.cond), so only the
+    chosen program executes.
+
+    Returns (t_start (N,), score (N,), mapped (N,)) int32/f32/bool.
+    """
+    sorter, dp = prims
+    key = jax.vmap(chaining.pack_anchor_keys)(q_pos, t_pos, hit_valid)
+    select = chaining._SELECTORS[cfg.anchor_select]
+    maxcnt = jnp.max(cnt)
+
+    def finalize(skey):
+        sq, st, sv = chaining.decode_anchor_keys(skey)
+        f, d = jax.vmap(dp)(sq, st, sv)
+        res = jax.vmap(lambda ff, dd, vv: chaining.best_chain(ff, dd, vv, cfg)
+                       )(f, d, sv)
+        return res.t_start, res.score, res.mapped
+
+    def run_full():
+        return finalize(jax.vmap(lambda k: sorter(k)[: cfg.max_anchors])(key))
+
+    def run_at(width):
+        return finalize(jax.vmap(lambda k: sorter(select(k, width)))(key))
+
+    out = run_full
+    for w in reversed(_chain_widths(cfg, key.shape[1])):
+        def out(w_=w, fallback=out):
+            return jax.lax.cond(maxcnt <= w_,
+                                functools.partial(run_at, w_), fallback)
+    return out()
+
+
+def _chain_outputs(q_pos, t_pos, hit_valid, cnt, cfg: MarsConfig, prims):
+    """Read-compaction gating around ``chain_phase``.
+
+    Only reads with anchors surviving the filters (``cnt > 0``) can reach
+    ``min_chain_score`` — under the paper's configurations the vote filter
+    already enforces reachability, since a surviving anchor implies a vote
+    window with >= thresh_voting anchors and thresh_voting * anchor_score >=
+    min_chain_score.  Zero-anchor reads are finalized directly with the
+    closed-form ``empty_chain_result`` (bit-identical to what the chain
+    phase computes for them).  The survivors are compacted into a
+    capacity-bounded batch of C = ceil(chain_capacity_frac * R) slots and
+    their results scattered back; when more than C reads survive, a runtime
+    branch (lax.cond) falls back to chaining the whole chunk — every read is
+    exact either way, so the branch choice is invisible (including across
+    shard_map partitions that take different branches).
+    """
+    R = cnt.shape[0]
+    empty = chaining.empty_chain_result(cfg)
+    cap = min(R, max(1, math.ceil(R * cfg.chain_capacity_frac)))
+    needs = cnt > 0
+
+    def run_all():
+        return chain_phase(q_pos, t_pos, hit_valid, cnt, cfg, prims)
+
+    if cap >= R:
+        return run_all()
+
+    def run_compacted():
+        order = jnp.argsort(~needs)          # stable: survivors first, in order
+        idx = order[:cap]
+        taken = needs[idx]
+        t_c, s_c, m_c = chain_phase(
+            q_pos[idx], t_pos[idx], hit_valid[idx],
+            jnp.where(taken, cnt[idx], 0), cfg, prims)
+        sidx = jnp.where(taken, idx, R)      # out-of-bounds rows -> dropped
+        t0 = jnp.full((R,), empty.t_start, jnp.int32)
+        s0 = jnp.full((R,), empty.score, jnp.float32)
+        m0 = jnp.zeros((R,), bool)
+        return (t0.at[sidx].set(t_c, mode="drop"),
+                s0.at[sidx].set(s_c, mode="drop"),
+                m0.at[sidx].set(m_c, mode="drop"))
+
+    return jax.lax.cond(needs.sum() <= cap, run_compacted, run_all)
+
+
 def _chunk_program(signals: jnp.ndarray, index: Dict[str, jnp.ndarray],
                    cfg: MarsConfig, plan: stages.Plan,
                    row_valid: jnp.ndarray) -> MapOutput:
-    """The shared chunk body: vmap the stage graph, mask pad rows out of
-    the counters, and sum to the uniform per-chunk counter schema."""
-    fn = lambda s: stages.execute_read(s, index, cfg, plan)
-    res, counters = jax.vmap(fn)(signals)
+    """The shared chunk body: run the stage graph over a chunk, mask pad rows
+    out of the counters, and sum to the uniform per-chunk counter schema.
+
+    With ``cfg.chain_compaction`` (default) the graph is split: CHEAP_STAGES
+    vmap over every read, then the chaining phase runs via the filter-aware
+    fast path (``_chain_outputs``).  The chain-stage counters are exact in
+    closed form from the per-read post-vote anchor count (n_sorted =
+    min(cnt, A); n_dp_pairs = n_sorted * B), so the counter schema is
+    identical to the unpartitioned path.  Disabling compaction (or a plan
+    whose chain stages expose no primitives) falls back to the original
+    whole-graph vmap.
+    """
     rv = row_valid
+    prims = (stages.chain_primitives(plan, cfg)
+             if cfg.chain_compaction else None)
+    if prims is None:
+        fn = lambda s: stages.execute_read(s, index, cfg, plan)
+        res, counters = jax.vmap(fn)(signals)
+        t_start, score, mapped = res.t_start, res.score, res.mapped
+    else:
+        q_pos, t_pos, hit_valid, counters = cheap_phase(
+            signals, index, cfg, plan)
+        cnt = counters["n_anchors_postvote"]
+        n_sorted = jnp.minimum(cnt, cfg.max_anchors)
+        counters = {**counters, "n_sorted": n_sorted,
+                    "n_dp_pairs": n_sorted * cfg.chain_band}
+        missing = stages.missing_counters(counters)
+        if missing:
+            raise RuntimeError(f"plan {plan} produced incomplete counters; "
+                               f"missing {missing}")
+        t_start, score, mapped = _chain_outputs(
+            q_pos, t_pos, hit_valid, cnt, cfg, prims)
     summed = {k: jnp.where(rv, v, jnp.zeros_like(v)).sum().astype(jnp.int32)
               for k, v in counters.items()}
     summed["n_reads"] = rv.sum().astype(jnp.int32)
     summed["n_samples"] = (rv.sum() * signals.shape[1]).astype(jnp.int32)
     return MapOutput(
-        t_start=res.t_start, score=res.score, mapped=res.mapped & rv,
+        t_start=t_start, score=score, mapped=mapped & rv,
         n_events=jnp.where(rv, counters["n_events"], 0).astype(jnp.int32),
         counters=summed)
 

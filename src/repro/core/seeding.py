@@ -17,6 +17,12 @@ import jax.numpy as jnp
 from repro.core.config import MarsConfig
 
 
+def _take_clip(table: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Default gather, hoisted to module level so every trace shares ONE
+    callable instead of a fresh per-call lambda (stable jaxpr identity)."""
+    return jnp.take(table, idx, axis=0, mode="clip")
+
+
 def query_index(keys: jnp.ndarray, valid: jnp.ndarray,
                 index: Dict[str, jnp.ndarray], cfg: MarsConfig,
                 gather=None) -> Tuple[jnp.ndarray, jnp.ndarray, Dict]:
@@ -27,14 +33,17 @@ def query_index(keys: jnp.ndarray, valid: jnp.ndarray,
     swapped in; defaults to jnp.take.
     """
     if gather is None:
-        gather = lambda table, idx: jnp.take(table, idx, axis=0,
-                                             mode="clip")
+        gather = _take_clip
     E, H = keys.shape[0], cfg.max_hits_per_seed
     mask = jnp.uint32(cfg.n_buckets - 1)
     bucket = (keys & mask).astype(jnp.int32)
 
-    start = gather(index["bucket_start"], bucket)            # (E,)
-    end = gather(index["bucket_start"], bucket + 1)          # (E,)
+    # one fused (2,E) gather for both bucket boundaries (start of bucket b
+    # and of b+1) — the pLUTo backend then lowers ONE gather shape instead
+    # of two separate (E,) lookups into the same table
+    start_end = gather(index["bucket_start"],
+                       jnp.stack([bucket, bucket + 1]))      # (2,E)
+    start, end = start_end[0], start_end[1]
     cnt_bucket = end - start
 
     j = jnp.arange(H, dtype=jnp.int32)[None, :]              # (1,H)

@@ -63,6 +63,12 @@ STAGE_ORDER: Tuple[str, ...] = (
     "finalize",   #         best/second-best chain -> mapping decision
 )
 
+# The filter-aware split used by the chunk program (core/pipeline.py): the
+# cheap phase runs on every read; the chaining phase runs only on the
+# compacted batch of reads that still have anchors after the filters.
+CHEAP_STAGES: Tuple[str, ...] = STAGE_ORDER[:5]   # detect .. vote
+CHAIN_STAGES: Tuple[str, ...] = STAGE_ORDER[5:]   # sort, dp, finalize
+
 # Canonical backend names.
 REFERENCE = "reference"
 PALLAS = "pallas"
@@ -99,24 +105,35 @@ class Backend:
     the implementation cannot serve (e.g. the fixed-point event-detect
     kernel under a float config); unsupported backends resolve to the
     reference implementation instead.
+
+    ``primitive`` is the stage's underlying array-level kernel, exposed so
+    batch-level fast paths can call it outside the per-read state-dict
+    protocol (the chaining fast path in core/pipeline.py runs sort/dp on a
+    compacted read batch at a reduced anchor width):
+
+        sort: primitive(keys (L,) int32) -> sorted keys (L,)
+        dp:   primitive(q, t, valid (A,), cfg) -> (f (A,) f32, d (A,) i32)
     """
     stage: str
     name: str
     fn: Callable[[State, MarsConfig, Dict[str, jnp.ndarray]], State]
     supports: Optional[Callable[[MarsConfig], bool]] = None
+    primitive: Optional[Callable] = None
 
 
 _REGISTRY: Dict[Tuple[str, str], Backend] = {}
 
 
 def register_backend(stage: str, name: str, fn,
-                     supports=None, replace: bool = False) -> None:
+                     supports=None, replace: bool = False,
+                     primitive=None) -> None:
     if stage not in STAGE_ORDER:
         raise ValueError(f"unknown stage {stage!r}; stages: {STAGE_ORDER}")
     key = (stage, name)
     if key in _REGISTRY and not replace:
         raise ValueError(f"backend {key} already registered")
-    _REGISTRY[key] = Backend(stage=stage, name=name, fn=fn, supports=supports)
+    _REGISTRY[key] = Backend(stage=stage, name=name, fn=fn, supports=supports,
+                             primitive=primitive)
 
 
 def get_backend(stage: str, name: str) -> Backend:
@@ -130,8 +147,13 @@ def registered_backends(stage: str) -> Tuple[str, ...]:
 def _ensure_backend_loaded(name: str) -> None:
     if name in _loaded_backend_modules:
         return
-    for mod in _BACKEND_MODULES.get(name, ()):
-        importlib.import_module(mod)
+    # resolve_plan may run inside a jit trace (map_chunk with plan=None);
+    # module-level jnp constants in the kernel packages must be created
+    # eagerly, not staged as tracers of the surrounding trace
+    import jax
+    with jax.ensure_compile_time_eval():
+        for mod in _BACKEND_MODULES.get(name, ()):
+            importlib.import_module(mod)
     _loaded_backend_modules.add(name)
 
 
@@ -160,6 +182,19 @@ def resolve_plan(cfg: MarsConfig, backend: str = REFERENCE) -> Plan:
     return tuple(plan)
 
 
+def execute_stages(state: State, index: Dict[str, jnp.ndarray],
+                   cfg: MarsConfig, plan: Plan,
+                   subset: Tuple[str, ...]) -> State:
+    """Run the stages of ``plan`` named in ``subset`` (in plan order) over an
+    existing state dict.  The chunk program uses this to split the per-read
+    graph into the cheap phase (CHEAP_STAGES, every read) and the chaining
+    phase (CHAIN_STAGES, compacted reads only)."""
+    for stage, bname in plan:
+        if stage in subset:
+            state = _REGISTRY[(stage, bname)].fn(state, cfg, index)
+    return state
+
+
 def execute_read(signal: jnp.ndarray, index: Dict[str, jnp.ndarray],
                  cfg: MarsConfig, plan: Plan):
     """Run the per-read stage graph.  signal: (S,) f32.
@@ -167,14 +202,41 @@ def execute_read(signal: jnp.ndarray, index: Dict[str, jnp.ndarray],
     Returns (ChainResult, counters) with counters exactly COUNTER_SCHEMA.
     """
     state: State = {"signal": signal, "counters": {}}
-    for stage, bname in plan:
-        state = _REGISTRY[(stage, bname)].fn(state, cfg, index)
+    state = execute_stages(state, index, cfg, plan, STAGE_ORDER)
     counters = state["counters"]
     missing = missing_counters(counters)
     if missing:
         raise RuntimeError(f"plan {plan} produced incomplete counters; "
                            f"missing {missing}")
     return state["result"], counters
+
+
+def chain_primitives(plan: Plan, cfg: MarsConfig):
+    """Resolve the (sorter, dp) array-level primitives of ``plan``'s chaining
+    stages for the batched fast path, or None when the plan's chain stages
+    cannot be expressed through primitives (a registered backend without a
+    ``primitive`` and a non-reference finalize must go through the per-read
+    stage bodies instead).
+
+    Returns (sorter(keys)->keys, dp(q, t, valid)->(f, d)) — both per-read,
+    vmap-safe.
+    """
+    p = dict(plan)
+    if p["finalize"] != REFERENCE:
+        return None
+    prims = []
+    for stage in ("sort", "dp"):
+        b = _REGISTRY[(stage, p[stage])]
+        if b.name != REFERENCE and b.primitive is None:
+            return None
+        prims.append(b.primitive)
+    sorter = prims[0] if prims[0] is not None else jnp.sort
+    if prims[1] is not None:
+        dp_prim = prims[1]
+        dp = lambda q, t, v: dp_prim(q, t, v, cfg)
+    else:
+        dp = lambda q, t, v: chaining.chain_dp(q, t, v, cfg)
+    return sorter, dp
 
 
 def missing_counters(counters: Dict[str, Any]) -> Tuple[str, ...]:

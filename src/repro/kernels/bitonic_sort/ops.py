@@ -41,4 +41,9 @@ def _sort_pallas(state, cfg, index):
     return stages.sort_with(state, cfg, index, sorter=sort1d)
 
 
-stages.register_backend("sort", stages.PALLAS, _sort_pallas)
+# ``sort1d`` doubles as the fast-path sorter primitive: under the
+# select-then-sort ladder (core/pipeline.chain_phase) it receives the (W,)
+# selected keys and sorts a 128/512-lane block instead of the padded full
+# E*H block.
+stages.register_backend("sort", stages.PALLAS, _sort_pallas,
+                        primitive=sort1d)

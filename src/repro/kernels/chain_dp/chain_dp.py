@@ -6,8 +6,16 @@ read's sorted anchors resident in VMEM and walks them with a fori_loop whose
 inner band (B predecessors) is a vector op — the band is the VPU lane
 dimension, the anchor walk is the sequential axis.
 
-Block layout: one read per program; q/t/valid (1, A) int32 blocks, band
-window B read with dynamic slices from the carried (1, A+B) state.  The
+Band state is a RING BUFFER: the carried loop state is only the four (B,)
+band vectors (f/diag/t/q of the last B anchors); anchor i occupies slot
+i % B and each step overwrites that one fixed slot with a lane-mask select.
+Scores stream straight to the output refs with a dynamic single-element
+store — nothing of size A is carried through the loop (the old kernel
+dynamic-sliced a full (A+B,) array every step).  argmax ties resolve to the
+OLDEST band anchor via the explicit age rank k = (slot - i) mod B, matching
+the age-ordered window of core/chaining.chain_dp{,_reference} bit for bit.
+
+Block layout: one read per program; q/t/valid (1, A) int32 blocks.  The
 arithmetic matches core/chaining.chain_dp exactly (same jnp ops).
 """
 from __future__ import annotations
@@ -31,39 +39,35 @@ def _kernel(q_ref, t_ref, v_ref, f_ref, d_ref, *, A: int, B: int,
     q = q_ref[...].reshape(A)
     t = t_ref[...].reshape(A)
     v = v_ref[...].reshape(A) != 0
-
-    f0 = jnp.full((A + B,), NEG, jnp.float32)
-    d0 = jnp.zeros((A + B,), jnp.int32)
-    tp = jnp.concatenate([jnp.full((B,), _SENT, jnp.int32), t])
-    qp = jnp.concatenate([jnp.full((B,), _SENT, jnp.int32), q])
+    lane = jnp.arange(B)
 
     def step(i, carry):
-        f, d = carry
+        bf, bd, bt, bq = carry
         ti, qi, vi = t[i], q[i], v[i]
-        fw = jax.lax.dynamic_slice(f, (i,), (B,))
-        dw = jax.lax.dynamic_slice(d, (i,), (B,))
-        tw = jax.lax.dynamic_slice(tp, (i,), (B,))
-        qw = jax.lax.dynamic_slice(qp, (i,), (B,))
-        dt = ti - tw
-        dq = qi - qw
+        dt = ti - bt
+        dq = qi - bq
         ok = (dt > 0) & (dq > 0) & (dt <= max_gap) & (dq <= max_gap)
         gap = jnp.abs(dt - dq).astype(jnp.float32)
         skip = jnp.minimum(dt, dq).astype(jnp.float32)
-        cand = fw - gap_cost * gap - skip_cost * skip
-        cand = jnp.where(ok & (fw > NEG / 2), cand, NEG)
-        bj = jnp.argmax(cand)
-        best = cand[bj]
-        ext = best > 0.0
+        cand = bf - gap_cost * gap - skip_cost * skip
+        cand = jnp.where(ok & (bf > NEG / 2), cand, NEG)
+        best = jnp.max(cand)
+        # oldest-first tie-break: age rank k=0 is the oldest band slot
+        k = (lane - i) % B
+        kbest = jnp.min(jnp.where(cand == best, k, B))
+        dbest = jnp.sum(jnp.where((cand == best) & (k == kbest), bd, 0))
         fi = anchor_score + jnp.maximum(best, 0.0)
         fi = jnp.where(vi, fi, NEG)
-        di = jnp.where(ext, dw[bj], ti - qi)
-        f = jax.lax.dynamic_update_slice(f, fi[None], (i + B,))
-        d = jax.lax.dynamic_update_slice(d, di[None], (i + B,))
-        return f, d
+        di = jnp.where(best > 0.0, dbest, ti - qi)
+        f_ref[0, pl.ds(i, 1)] = fi[None]
+        d_ref[0, pl.ds(i, 1)] = di[None]
+        wr = lane == i % B
+        return (jnp.where(wr, fi, bf), jnp.where(wr, di, bd),
+                jnp.where(wr, ti, bt), jnp.where(wr, qi, bq))
 
-    f, d = jax.lax.fori_loop(0, A, step, (f0, d0))
-    f_ref[...] = f[B:].reshape(1, A)
-    d_ref[...] = d[B:].reshape(1, A)
+    init = (jnp.full((B,), NEG, jnp.float32), jnp.zeros((B,), jnp.int32),
+            jnp.full((B,), _SENT, jnp.int32), jnp.full((B,), _SENT, jnp.int32))
+    jax.lax.fori_loop(0, A, step, init)
 
 
 @functools.partial(jax.jit,

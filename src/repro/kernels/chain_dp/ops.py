@@ -18,13 +18,19 @@ def chain_dp(q: jnp.ndarray, t: jnp.ndarray, valid: jnp.ndarray,
         skip_cost=cfg.skip_cost, anchor_score=cfg.anchor_score)
 
 
+def dp_read(q: jnp.ndarray, t: jnp.ndarray, valid: jnp.ndarray,
+            cfg: MarsConfig):
+    """Per-read (vmap-safe) view of the kernel: (A,) in, (A,) out — the
+    ``dp`` primitive the chaining fast path consumes at any anchor width."""
+    return tuple(x[0] for x in chain_dp(q[None], t[None], valid[None], cfg))
+
+
 def _dp_pallas(state, cfg, index):
     """Stage backend: banded chaining DP on the Pallas kernel (the kernel
     is batch-level; the per-read stage adds/strips a unit batch dim, which
     vmap batches away)."""
-    dp = lambda q, t, v: tuple(
-        x[0] for x in chain_dp(q[None], t[None], v[None], cfg))
+    dp = lambda q, t, v: dp_read(q, t, v, cfg)
     return stages.dp_with(state, cfg, index, dp=dp)
 
 
-stages.register_backend("dp", stages.PALLAS, _dp_pallas)
+stages.register_backend("dp", stages.PALLAS, _dp_pallas, primitive=dp_read)
