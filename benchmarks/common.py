@@ -44,15 +44,18 @@ FIG5_FRACTIONS = {
 
 
 def pipeline_run(ds_key: str, mode: str, force: bool = False,
-                 backend: str = stages.REFERENCE) -> Dict:
+                 backend: str = stages.REFERENCE, mesh=None) -> Dict:
     """Run (or load cached) one dataset x mode mapping; returns counters,
     accuracy, wall time and raw sizes.
 
-    ``backend`` selects the stage-registry backend plan ("reference" or
-    "pallas"); counters follow stages.CHUNK_COUNTER_SCHEMA either way, so
-    the hardware model consumes both identically."""
+    ``backend`` selects the stage-registry backend plan ("reference",
+    "pallas", or — with a ``mesh`` — the partitioned-index query schedules
+    "ring"/"a2a"); counters follow stages.CHUNK_COUNTER_SCHEMA in every
+    case, so the hardware model consumes all of them identically."""
     CACHE.mkdir(parents=True, exist_ok=True)
     suffix = "" if backend == stages.REFERENCE else f"_{backend}"
+    if mesh is not None:      # distributed runs cache per mesh shape
+        suffix += "_" + "x".join(f"{a}{n}" for a, n in mesh.shape.items())
     f = CACHE / f"{ds_key}_{mode}{suffix}.json"
     if f.exists() and not force:
         return json.loads(f.read_text())
@@ -60,7 +63,7 @@ def pipeline_run(ds_key: str, mode: str, force: bool = False,
     cfg = datasets.config_for(spec).with_mode(mode)
     ref, reads = datasets.build(spec, cfg)
     index = build_index(ref.events_concat, ref.n_events, cfg)
-    mapper = Mapper(index, cfg, backend=backend)
+    mapper = Mapper(index, cfg, backend=backend, mesh=mesh)
     # explicit warm-up: map one chunk's worth of reads first so the timed
     # run below is steady-state (jit compile of the (32, S) chunk program
     # excluded from wall_time)
@@ -73,6 +76,7 @@ def pipeline_run(ds_key: str, mode: str, force: bool = False,
     from benchmarks.microbench import git_sha
     rec = dict(
         dataset=ds_key, mode=mode, backend=backend, git_sha=git_sha(),
+        mesh=None if mesh is None else dict(mesh.shape),
         plan=[list(p) for p in mapper.plan],
         counters={k: int(v) for k, v in out.counters.items()},
         accuracy={k: float(v) for k, v in acc.items()},

@@ -14,6 +14,14 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# Repo hygiene: compiled bytecode must never be tracked (a stray tracked
+# .pyc shadows source edits for anyone with a stale checkout).
+if tracked_pyc=$(git ls-files | grep -E '(^|/)__pycache__/|\.pyc$'); then
+    echo "ERROR: tracked __pycache__/*.pyc paths (git rm them):" >&2
+    echo "$tracked_pyc" >&2
+    exit 1
+fi
+
 MARKER=(-m "not slow")
 BENCH=0
 while [[ "${1:-}" == "--all" || "${1:-}" == "--bench" ]]; do
@@ -25,6 +33,11 @@ while [[ "${1:-}" == "--all" || "${1:-}" == "--bench" ]]; do
 done
 
 python -m pytest -x -q "${MARKER[@]}" "$@"
+
+# Distributed parity: the partitioned-index query backends must stay
+# bit-identical to single-device map_chunk on a multi-device CPU mesh.
+XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+    python -m pytest -x -q tests/test_distributed_stages.py
 
 if [[ "$BENCH" == 1 ]]; then
     python scripts/bench_pipeline.py --check

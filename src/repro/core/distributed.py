@@ -1,4 +1,5 @@
-"""Distributed MARS mapping: shard_map over the production mesh.
+"""Distributed query backends: the partitioned-index mapper as stage-engine
+`query` implementations.
 
 MARS distributes raw reads across flash channels and queries index
 partitions sequentially, overlapping partition loads with compute
@@ -7,225 +8,226 @@ partitions sequentially, overlapping partition loads with compute
   * reads are sharded over ALL mesh axes (every chip maps its own reads —
     the "channel stripe");
   * the reference index is range-partitioned by bucket over the 'model'
-    axis (partition p owns buckets [p*B/n, (p+1)*B/n));
-  * a RING schedule rotates each chip's seed keys (and accumulated hits)
-    around the 'model' axis with collective_permute; at step k a chip
-    queries its resident partition with the keys that originated k ranks
-    upstream.  After n_model steps every seed has visited every partition
-    and its hits have returned home — the collective is overlapped with
+    axis (``core/index.partition_index``: partition p owns buckets
+    [p*B/n, (p+1)*B/n));
+  * `query:ring` rotates each read's seed keys (and accumulated hits +
+    counter partials) around the 'model' axis with collective_permute; at
+    step k a chip queries its resident partition with keys that originated
+    k ranks upstream.  After n_model steps every seed has visited every
+    partition and its hits are home — the collective is overlapped with
     query compute exactly like MARS overlaps flash loads with PIM work.
+  * `query:a2a` rotates ONLY the keys; each shard accumulates hits for
+    every source rank locally and ONE all_to_all returns them home — the
+    (E,H) hit payload crosses the wire once instead of n_model times.
 
-Everything after seeding (vote filter, sort, chaining DP) runs locally on
-the read's home chip.
+There is NO separate per-read program here: the backends are registered
+`query` stages, so ``stages.resolve_plan(cfg, "ring"|"a2a")`` plus
+``pipeline.map_chunk_sharded`` run the IDENTICAL chunk program as the
+single-device path — cheap phase, compaction-gated chaining fast path,
+width ladder, and the exact ``stages.CHUNK_COUNTER_SCHEMA`` (per-read
+counter partials ride home with the hits, so pad-row masking via
+``n_valid`` works in the distributed path too).
+
+``make_distributed_mapper`` survives as a thin compatibility wrapper over
+the shared sharded chunk program; ``partition_index`` lives next to Index
+construction in ``core/index.py`` and is re-exported here.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
 
-from repro.core import chaining, events, hashing, quantization, vote
+from repro.core import seeding, stages
 from repro.core.config import MarsConfig
-from repro.core.index import Index
+from repro.core.index import (INDEX_AXIS, PARTITIONED_INDEX_KEYS,  # noqa: F401 (re-export)
+                              partition_index)
 
 
 # --------------------------------------------------------------------------- #
-# Host-side index partitioning
+# Device-local query of one resident partition (per read, vmap-safe)
 # --------------------------------------------------------------------------- #
-def partition_index(index: Index, n_parts: int) -> Dict[str, np.ndarray]:
-    """Range-partition by bucket: partition p owns an equal bucket range.
-    Entries padded to the max partition size (device-uniform shapes)."""
-    nb = index.cfg.n_buckets
-    assert nb % n_parts == 0
-    bl = nb // n_parts
-    starts = index.bucket_start
-    sizes = [int(starts[(p + 1) * bl] - starts[p * bl])
-             for p in range(n_parts)]
-    emax = max(max(sizes), 1)
-    keys = np.zeros((n_parts, emax), np.uint32)
-    pos = np.zeros((n_parts, emax), np.int32)
-    cnt = np.zeros((n_parts, emax), np.int32)
-    bstart = np.zeros((n_parts, bl + 1), np.int32)
-    for p in range(n_parts):
-        lo, hi = int(starts[p * bl]), int(starts[(p + 1) * bl])
-        n = hi - lo
-        keys[p, :n] = index.entries_key[lo:hi]
-        pos[p, :n] = index.entries_pos[lo:hi]
-        cnt[p, :n] = index.entries_cnt[lo:hi]
-        bstart[p] = starts[p * bl:(p + 1) * bl + 1] - starts[p * bl]
-    return dict(p_bucket_start=bstart, p_entries_key=keys,
-                p_entries_pos=pos, p_entries_cnt=cnt)
+def _query_partition(keys: jnp.ndarray, valid: jnp.ndarray,
+                     part: Dict[str, jnp.ndarray], my_part: jnp.ndarray,
+                     n_parts: int, cfg: MarsConfig):
+    """keys: (E,) uint32, valid: (E,) bool; ``part`` is THIS device's
+    partition (leading axis squeezed).
 
-
-# --------------------------------------------------------------------------- #
-# Device-local query of one partition
-# --------------------------------------------------------------------------- #
-def _query_partition(keys, valid, part: Dict[str, jnp.ndarray],
-                     my_part: jnp.ndarray, n_parts: int, cfg: MarsConfig):
-    """keys: (R, E) uint32.  Returns (t_pos (R,E,H), hit_valid (R,E,H),
-    probes) for seeds whose bucket lives in THIS partition."""
+    Returns (t_pos (E,H), hit (E,H), probes, raw, exact) for the seeds whose
+    bucket lives in this partition: ``hit`` is post-frequency-filter, and
+    the three scalars are this partition's int32 share of the read's
+    n_bucket_probes / n_hits_raw / n_hits_exact counters.  The filter and
+    counter math itself is ``seeding.match_entries`` with the seed mask
+    restricted to owned seeds — each seed's bucket lives in exactly one
+    partition, so the per-partition partials sum to the replicated-table
+    counters exactly.
+    """
     H = cfg.max_hits_per_seed
     bl_log = cfg.hash_bits - int(np.log2(n_parts))
-    bucket_g = (keys & jnp.uint32(cfg.n_buckets - 1)).astype(jnp.int32)
-    owner = bucket_g >> bl_log
-    local_b = bucket_g & ((1 << bl_log) - 1)
+    bucket = (keys & jnp.uint32(cfg.n_buckets - 1)).astype(jnp.int32)
+    owner = bucket >> bl_log
+    local_b = bucket & ((1 << bl_log) - 1)
     mine = (owner == my_part) & valid
 
     bstart = part["p_bucket_start"]
     start = jnp.take(bstart, local_b, axis=0, mode="clip")
     end = jnp.take(bstart, local_b + 1, axis=0, mode="clip")
     cnt_bucket = end - start
-    j = jnp.arange(H, dtype=jnp.int32)
-    idx = start[..., None] + j                      # (R,E,H)
+    j = jnp.arange(H, dtype=jnp.int32)[None, :]
+    idx = start[:, None] + j                                 # (E,H)
     n_entries = part["p_entries_key"].shape[0]
     idx_c = jnp.minimum(idx, n_entries - 1)
     got_key = jnp.take(part["p_entries_key"], idx_c, axis=0, mode="clip")
     t_pos = jnp.take(part["p_entries_pos"], idx_c, axis=0, mode="clip")
     key_cnt = jnp.take(part["p_entries_cnt"], idx_c, axis=0, mode="clip")
 
-    in_bucket = j < cnt_bucket[..., None]
-    hit = in_bucket & (got_key == keys[..., None].astype(jnp.uint32)) & \
-        mine[..., None]
-    if cfg.use_freq_filter:
-        hit = hit & (key_cnt <= cfg.thresh_freq)
-    probes = (jnp.minimum(cnt_bucket, H) * mine).sum()
-    return t_pos, hit, probes
+    hit, probes, raw, exact = seeding.match_entries(
+        keys, mine, got_key, key_cnt, cnt_bucket, cfg)
+    return t_pos, hit, probes, raw, exact
+
+
+def _partition_view(index: Dict[str, jnp.ndarray], cfg: MarsConfig):
+    """Squeeze the local (1, ...) shard of a partitioned index and recover
+    the (static) partition count from the local bucket range."""
+    missing = [k for k in PARTITIONED_INDEX_KEYS if k not in index]
+    if missing:
+        raise ValueError(
+            f"partitioned query backend needs index keys "
+            f"{PARTITIONED_INDEX_KEYS} (core/index.partition_index); "
+            f"missing {missing} — got {sorted(index)}")
+    if index["p_bucket_start"].ndim != 2 or index["p_bucket_start"].shape[0] != 1:
+        raise ValueError(
+            "partitioned index must arrive as ONE resident partition per "
+            "device (leading partition axis sharded over the mesh "
+            f"'{INDEX_AXIS}' axis); got local p_bucket_start shape "
+            f"{index['p_bucket_start'].shape}")
+    part = {k: index[k][0] for k in PARTITIONED_INDEX_KEYS}
+    bl = part["p_bucket_start"].shape[0] - 1
+    n_parts = cfg.n_buckets // bl
+    return part, n_parts
 
 
 # --------------------------------------------------------------------------- #
-# The shard_map program
+# The `query` stage backends
 # --------------------------------------------------------------------------- #
-def make_distributed_mapper(cfg: MarsConfig, mesh: Mesh,
-                            schedule: str = "a2a"):
-    """Returns (fn, in_shardings builder).  fn(signals, parts) -> results.
+def _query_ring(state: stages.State, cfg: MarsConfig, index) -> stages.State:
+    """Ring schedule (paper Section 6.3 analogue): keys, accumulated packed
+    hits and counter partials all rotate around the index axis; after
+    n_parts steps everything is back on the read's home device."""
+    part, n_parts = _partition_view(index, cfg)
+    keys, valid = state["keys"], state["seed_valid"]
+    E, H = keys.shape[0], cfg.max_hits_per_seed
+    my_rank = jax.lax.axis_index(INDEX_AXIS)
+    perm = [(i, (i + 1) % n_parts) for i in range(n_parts)]
 
-    signals: (R, S) f32 sharded over all axes on R.
-    parts: partition_index() arrays with leading axis n_model sharded over
-    'model'.
+    def rot(x):
+        return jax.lax.ppermute(x, INDEX_AXIS, perm)
 
-    schedule='ring' rotates keys AND their accumulated hit tensors around
-    the model axis (baseline, Section 6.3 analogue).  schedule='a2a' (§Perf
-    iteration, default) rotates ONLY the keys; each shard accumulates hits
-    for every source rank locally and ONE all_to_all returns them home —
-    the (R,E,H) hit payload crosses the wire once instead of n_model times
-    (~17x less permute traffic at default bounds).
+    def step(carry, _):
+        keys_r, valid_r, packed, probes, raw, exact = carry
+        tp, hv, pr, rw, ex = _query_partition(keys_r, valid_r, part,
+                                              my_rank, n_parts, cfg)
+        # hit -> t_pos+1, miss -> 0: ONE int32 plane on the wire instead of
+        # separate int32 + bool planes; each (e,h) slot is hit by at most
+        # one partition, so max-combining is exact.
+        packed = jnp.maximum(packed, jnp.where(hv, tp + 1, 0))
+        carry = (keys_r, valid_r, packed, probes + pr, raw + rw, exact + ex)
+        return tuple(rot(x) for x in carry), None
+
+    z = jnp.zeros((), jnp.int32)
+    carry = (keys, valid, jnp.zeros((E, H), jnp.int32), z, z, z)
+    (_, _, packed, probes, raw, exact), _ = jax.lax.scan(
+        step, carry, None, length=n_parts)
+    # after n_parts rotations everything is back home
+    return _finish_query(state, cfg, packed, probes, raw, exact)
+
+
+def _query_a2a(state: stages.State, cfg: MarsConfig, index) -> stages.State:
+    """All-to-all schedule (§Perf iteration, default): only (keys, valid)
+    rotate; hits and counter partials accumulate locally per source rank and
+    ONE all_to_all returns them home — the (E,H) hit payload crosses the
+    wire once instead of n_parts times."""
+    part, n_parts = _partition_view(index, cfg)
+    keys, valid = state["keys"], state["seed_valid"]
+    E, H = keys.shape[0], cfg.max_hits_per_seed
+    my_rank = jax.lax.axis_index(INDEX_AXIS)
+    perm = [(i, (i + 1) % n_parts) for i in range(n_parts)]
+
+    def step(carry, k):
+        keys_r, valid_r, pbuf, sbuf = carry
+        tp, hv, pr, rw, ex = _query_partition(keys_r, valid_r, part,
+                                              my_rank, n_parts, cfg)
+        packed = jnp.where(hv, tp + 1, 0)
+        src = jnp.mod(my_rank - k, n_parts)      # originating rank
+        pbuf = jax.lax.dynamic_update_slice(pbuf, packed[None], (src, 0, 0))
+        sbuf = jax.lax.dynamic_update_slice(
+            sbuf, jnp.stack([pr, rw, ex])[None], (src, 0))
+        keys_r = jax.lax.ppermute(keys_r, INDEX_AXIS, perm)
+        valid_r = jax.lax.ppermute(valid_r, INDEX_AXIS, perm)
+        return (keys_r, valid_r, pbuf, sbuf), None
+
+    pbuf0 = jnp.zeros((n_parts, E, H), jnp.int32)
+    sbuf0 = jnp.zeros((n_parts, 3), jnp.int32)
+    (_, _, pbuf, sbuf), _ = jax.lax.scan(
+        step, (keys, valid, pbuf0, sbuf0), jnp.arange(n_parts))
+    # send each source rank its hits + counter partials
+    packed = jax.lax.all_to_all(pbuf, INDEX_AXIS, 0, 0).max(axis=0)
+    scal = jax.lax.all_to_all(sbuf, INDEX_AXIS, 0, 0).sum(axis=0)
+    return _finish_query(state, cfg, packed, scal[0], scal[1], scal[2])
+
+
+def _finish_query(state, cfg: MarsConfig, packed, probes, raw, exact):
+    """Unpack the combined hit plane and emit the exact query-stage counter
+    schema of seeding.query_index."""
+    hit_valid = packed > 0
+    t_pos = jnp.maximum(packed - 1, 0)
+    q_pos = jnp.broadcast_to(
+        jnp.arange(cfg.max_events, dtype=jnp.int32)[:, None], t_pos.shape)
+    counters = dict(
+        n_seeds=state["seed_valid"].sum(),
+        n_bucket_probes=probes,
+        n_hits_raw=raw,
+        n_hits_postfreq=hit_valid.sum(),
+        n_hits_exact=exact,
+    )
+    return {**state, "q_pos": q_pos, "t_pos": t_pos, "hit_valid": hit_valid,
+            "counters": {**state["counters"], **counters}}
+
+
+stages.register_backend("query", "ring", _query_ring,
+                        index_kind="partitioned")
+stages.register_backend("query", "a2a", _query_a2a,
+                        index_kind="partitioned")
+
+
+# --------------------------------------------------------------------------- #
+# Compatibility wrappers (legacy distributed-mapper API)
+# --------------------------------------------------------------------------- #
+def make_distributed_mapper(cfg: MarsConfig, mesh, schedule: str = "a2a"):
+    """Thin compatibility wrapper: the old (signals, parts) ->
+    (t_start, score, mapped, counters) jit signature over the SHARED sharded
+    chunk program (``pipeline.map_chunk_sharded``'s body) with the
+    ``query:ring`` / ``query:a2a`` backend.
+
+    New code should call ``stages.resolve_plan(cfg, schedule)`` +
+    ``pipeline.map_chunk_sharded`` (or drive chunks through ``Mapper`` /
+    ``core/driver.py``) directly; counters now carry the full
+    ``stages.CHUNK_COUNTER_SCHEMA``.
     """
-    dp_all = tuple(mesh.axis_names)                 # reads over every axis
-    n_model = mesh.shape["model"]
+    from repro.core.pipeline import sharded_chunk_fn
+    plan = stages.resolve_plan(cfg, schedule)
+    inner = sharded_chunk_fn(cfg, mesh, plan)
 
-    def body(signals, parts):
-        # local shapes: signals (R_loc, S); parts leaves (1, ...) -> squeeze
-        parts_l = {k: v[0] for k, v in parts.items()}
-        my_rank = jax.lax.axis_index("model")
-
-        def per_read(sig):
-            ev, n_ev, _ = events.detect_events(sig, cfg)
-            ev_valid = jnp.arange(cfg.max_events) < n_ev
-            sym = quantization.quantize_events(ev, ev_valid, cfg)
-            keys, seed_valid = hashing.pack_seeds(sym, n_ev, cfg)
-            return keys, seed_valid, n_ev
-
-        keys, seed_valid, n_ev = jax.vmap(per_read)(signals)
-        R, E = keys.shape
-        H = cfg.max_hits_per_seed
-
-        # ---- ring over index partitions -------------------------------- #
-        perm = [(i, (i + 1) % n_model) for i in range(n_model)]
-
-        if schedule == "ring":
-            def ring_step(carry, _):
-                keys_r, valid_r, t_pos, hit, probes = carry
-                tp, hv, pr = _query_partition(keys_r, valid_r, parts_l,
-                                              my_rank, n_model, cfg)
-                t_pos = jnp.where(hv, tp, t_pos)
-                hit = hit | hv
-                probes = probes + pr
-                # rotate the query set (and its accumulated hits) to the
-                # next partition holder.
-                keys_r = jax.lax.ppermute(keys_r, "model", perm)
-                valid_r = jax.lax.ppermute(valid_r, "model", perm)
-                t_pos = jax.lax.ppermute(t_pos, "model", perm)
-                hit = jax.lax.ppermute(hit, "model", perm)
-                return (keys_r, valid_r, t_pos, hit, probes), None
-
-            t0 = jnp.zeros((R, E, H), jnp.int32)
-            h0 = jnp.zeros((R, E, H), bool)
-            carry = (keys, seed_valid, t0, h0, jnp.zeros((), jnp.int32))
-            (keys, seed_valid, t_pos, hit, probes), _ = jax.lax.scan(
-                ring_step, carry, None, length=n_model)
-            # after n_model rotations everything is back home
-        else:
-            # a2a schedule: only (keys, valid) rotate; hits accumulate
-            # locally per source rank, one all_to_all returns them home.
-            # (t_pos, hit) pack into ONE int32 (hit -> t_pos+1, miss -> 0):
-            # 20% less payload than separate int32 + bool planes.
-            def ring_step(carry, k):
-                keys_r, valid_r, packed_buf, probes = carry
-                tp, hv, pr = _query_partition(keys_r, valid_r, parts_l,
-                                              my_rank, n_model, cfg)
-                packed = jnp.where(hv, tp + 1, 0)
-                src = jnp.mod(my_rank - k, n_model)
-                packed_buf = jax.lax.dynamic_update_slice(
-                    packed_buf, packed[None], (src, 0, 0, 0))
-                keys_r = jax.lax.ppermute(keys_r, "model", perm)
-                valid_r = jax.lax.ppermute(valid_r, "model", perm)
-                return (keys_r, valid_r, packed_buf, probes + pr), None
-
-            p0 = jnp.zeros((n_model, R, E, H), jnp.int32)
-            carry = (keys, seed_valid, p0, jnp.zeros((), jnp.int32))
-            (_, _, packed_buf, probes), _ = jax.lax.scan(
-                ring_step, carry, jnp.arange(n_model))
-            # send each source rank its hits; combine (each seed's hits
-            # come from exactly one partition, so a max suffices)
-            packed_home = jax.lax.all_to_all(packed_buf, "model", 0, 0)
-            packed = packed_home.max(axis=0)
-            hit = packed > 0
-            t_pos = jnp.maximum(packed - 1, 0)
-
-        # ---- local filters + chaining ----------------------------------- #
-        q_pos = jnp.broadcast_to(
-            jnp.arange(E, dtype=jnp.int32)[None, :, None], (R, E, H))
-
-        def tail(qp, tp, hv):
-            hv2, c_vote = vote.vote_filter(qp, tp, hv, cfg)
-            res, c_chain = chaining.chain_anchors(qp, tp, hv2, cfg)
-            return res, {**c_vote, **c_chain}
-
-        res, counters = jax.vmap(tail)(q_pos, t_pos, hit)
-        counters = {k: v.sum() for k, v in counters.items()}
-        counters["n_hits_postfreq"] = hit.sum()
-        counters["n_bucket_probes"] = probes
-        counters["n_seeds"] = seed_valid.sum()
-        counters["n_events"] = n_ev.sum()
-        counters = {k: jax.lax.psum(v, tuple(mesh.axis_names))
-                    for k, v in counters.items()}
-        return (res.t_start, res.score, res.mapped, counters)
-
-    parts_spec = {k: P("model") for k in
-                  ("p_bucket_start", "p_entries_key", "p_entries_pos",
-                   "p_entries_cnt")}
-    fn = shard_map(
-        body, mesh=mesh,
-        in_specs=(P(dp_all, None), parts_spec),
-        out_specs=(P(dp_all), P(dp_all), P(dp_all),
-                   {k: P() for k in ("n_anchors_postvote", "n_votes_cast",
-                                     "n_sorted", "n_dp_pairs",
-                                     "n_hits_postfreq", "n_bucket_probes",
-                                     "n_seeds", "n_events")}),
-        check_rep=False)
+    def fn(signals, parts):
+        t, s, m, _, counters = inner(signals, parts,
+                                     jnp.int32(signals.shape[0]))
+        return t, s, m, counters
     return jax.jit(fn)
 
 
-def input_shardings(mesh: Mesh):
-    dp_all = tuple(mesh.axis_names)
-    sig = NamedSharding(mesh, P(dp_all, None))
-    parts = {k: NamedSharding(mesh, P("model"))
-             for k in ("p_bucket_start", "p_entries_key", "p_entries_pos",
-                       "p_entries_cnt")}
-    return sig, parts
+def input_shardings(mesh):
+    """(signals sharding, partitioned-index shardings) for the wrapper."""
+    from repro.distributed.sharding import mapping_chunk_shardings
+    return mapping_chunk_shardings(mesh, partitioned_index=True)

@@ -85,7 +85,9 @@ def _to_host(ci: int, n_valid: int, out) -> Tuple[int, int, "MapOutput"]:
 
 def collect(stream: Iterable[Tuple[int, int, "MapOutput"]]) -> "MapOutput":
     """Fold a stream_map stream into one host MapOutput (concat per-read
-    fields, sum counters)."""
+    fields, sum counters).  An empty stream still carries the full
+    zero-valued ``stages.CHUNK_COUNTER_SCHEMA`` so downstream consumers
+    (workload.from_counters / ssd_model) work on a zero-read job."""
     from repro.core.pipeline import MapOutput
     parts: List = []
     counters: Dict[str, int] = {}
@@ -94,10 +96,11 @@ def collect(stream: Iterable[Tuple[int, int, "MapOutput"]]) -> "MapOutput":
         for k, v in out.counters.items():
             counters[k] = counters.get(k, 0) + int(v)
     if not parts:
+        from repro.core.stages import CHUNK_COUNTER_SCHEMA
         z = np.zeros(0)
         return MapOutput(t_start=z.astype(np.int32), score=z.astype(np.float32),
                          mapped=z.astype(bool), n_events=z.astype(np.int32),
-                         counters=counters)
+                         counters={k: 0 for k in CHUNK_COUNTER_SCHEMA})
     return MapOutput(
         t_start=np.concatenate([p.t_start for p in parts]),
         score=np.concatenate([p.score for p in parts]),

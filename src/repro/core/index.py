@@ -115,3 +115,55 @@ def index_arrays(index: Index):
         entries_pos=index.entries_pos,
         entries_cnt=index.entries_cnt,
     )
+
+
+# --------------------------------------------------------------------------- #
+# Range partitioning (distributed query backends)
+# --------------------------------------------------------------------------- #
+# The mesh axis holding index partitions (the TP axis of the production
+# mesh, launch/mesh.py) — the ONE name the query backends' collectives,
+# the shard_map in_specs and the partition shardings all key on.
+INDEX_AXIS = "model"
+
+# The pytree keys of a partitioned index (every leaf has a leading
+# (n_parts,) partition axis, sharded over INDEX_AXIS by
+# distributed/sharding.partitioned_index_shardings).
+PARTITIONED_INDEX_KEYS = ("p_bucket_start", "p_entries_key",
+                          "p_entries_pos", "p_entries_cnt")
+
+
+def partition_index(index: Index, n_parts: int):
+    """Range-partition by bucket: partition p owns an equal bucket range
+    [p*B/n, (p+1)*B/n).  Entries are padded to the max partition size so
+    every device holds the same (static) shapes.
+
+    This is the flash-partition layout of the paper's Section 6.3: the
+    `query:ring` / `query:a2a` stage backends (core/distributed.py) run
+    the hash-table query against exactly one resident partition per step.
+    Entry order inside a partition matches the global index (contiguous
+    bucket ranges), so partitioned query results are bit-identical to the
+    replicated table's.
+    """
+    nb = index.cfg.n_buckets
+    if n_parts & (n_parts - 1):
+        raise ValueError(f"n_parts must be a power of two (bucket owner is "
+                         f"key >> log2(bucket_range)); got {n_parts}")
+    assert nb % n_parts == 0, (nb, n_parts)
+    bl = nb // n_parts
+    starts = index.bucket_start
+    sizes = [int(starts[(p + 1) * bl] - starts[p * bl])
+             for p in range(n_parts)]
+    emax = max(max(sizes), 1)
+    keys = np.zeros((n_parts, emax), np.uint32)
+    pos = np.zeros((n_parts, emax), np.int32)
+    cnt = np.zeros((n_parts, emax), np.int32)
+    bstart = np.zeros((n_parts, bl + 1), np.int32)
+    for p in range(n_parts):
+        lo, hi = int(starts[p * bl]), int(starts[(p + 1) * bl])
+        n = hi - lo
+        keys[p, :n] = index.entries_key[lo:hi]
+        pos[p, :n] = index.entries_pos[lo:hi]
+        cnt[p, :n] = index.entries_cnt[lo:hi]
+        bstart[p] = starts[p * bl:(p + 1) * bl + 1] - starts[p * bl]
+    return dict(p_bucket_start=bstart, p_entries_key=keys,
+                p_entries_pos=pos, p_entries_cnt=cnt)

@@ -231,6 +231,11 @@ def map_chunk(signals: jnp.ndarray, index: Dict[str, jnp.ndarray],
     if plan is None:
         plan = stages.resolve_plan(
             cfg, stages.PALLAS if use_kernels else stages.REFERENCE)
+    if stages.plan_index_kind(plan) != "replicated":
+        raise ValueError(
+            f"plan {plan} uses a partitioned-index query backend; run it "
+            "through map_chunk_sharded with a mesh (partitions live on the "
+            "'model' axis)")
     R = signals.shape[0]
     if n_valid is None:
         row_valid = jnp.ones((R,), bool)
@@ -260,13 +265,32 @@ def _sharded_chunk_fn(cfg: MarsConfig, mesh, plan: stages.Plan):
         counters = {k: jax.lax.psum(v, axes) for k, v in out.counters.items()}
         return out.t_start, out.score, out.mapped, out.n_events, counters
 
+    # index layout follows the plan's query backend: the whole table on
+    # every device, or one bucket-range partition per INDEX_AXIS rank
+    # (query:ring / query:a2a, core/distributed.py)
+    if stages.plan_index_kind(plan) == "partitioned":
+        from repro.core.index import INDEX_AXIS, PARTITIONED_INDEX_KEYS
+        index_spec = {k: P(INDEX_AXIS) for k in PARTITIONED_INDEX_KEYS}
+    else:
+        index_spec = P()
     counter_spec = {k: P() for k in stages.CHUNK_COUNTER_SCHEMA}
     fn = shard_map(body, mesh=mesh,
-                   in_specs=(P(axes, None), P(), P()),
+                   in_specs=(P(axes, None), index_spec, P()),
                    out_specs=(P(axes), P(axes), P(axes), P(axes),
                               counter_spec),
                    check_rep=False)
     return jax.jit(fn)
+
+
+def sharded_chunk_fn(cfg: MarsConfig, mesh, plan: stages.Plan):
+    """The jit'd sharded chunk program for a resolved plan:
+    ``fn(signals (R,S), index pytree, n_valid) -> (t_start, score, mapped,
+    n_events, counters)``.  Public accessor for callers that need the raw
+    program rather than ``map_chunk_sharded``'s host conveniences — e.g.
+    the legacy distributed-mapper wrapper and abstract ``.lower`` dry-runs
+    (launch/dryrun.py), where device_put on ShapeDtypeStructs is
+    impossible.  Cached per (cfg, mesh, plan)."""
+    return _sharded_chunk_fn(cfg, mesh, plan)
 
 
 def map_chunk_sharded(signals: jnp.ndarray, index: Dict[str, jnp.ndarray],
@@ -274,9 +298,14 @@ def map_chunk_sharded(signals: jnp.ndarray, index: Dict[str, jnp.ndarray],
                       n_valid=None,
                       plan: Optional[stages.Plan] = None) -> MapOutput:
     """Data-parallel ``map_chunk``: reads sharded over EVERY mesh axis (the
-    MARS "channel stripe"), index replicated, counters psum-combined.
+    MARS "channel stripe"), counters psum-combined.  The index is either
+    replicated (default plans) or, for the `query:ring` / `query:a2a`
+    backends, the ``partition_index`` pytree with one bucket-range
+    partition resident per 'model' rank — either way the chunk program is
+    IDENTICAL to the single-device path.
 
-    Per-read programs are independent, so outputs are bit-identical to the
+    Per-read programs are independent and each seed's bucket lives in
+    exactly one partition, so outputs are bit-identical to the
     single-device path; integer counter sums are associative, so the psum
     is exact.  R must divide evenly over the mesh.
     """
@@ -288,6 +317,12 @@ def map_chunk_sharded(signals: jnp.ndarray, index: Dict[str, jnp.ndarray],
     if R % n_dev != 0:
         raise ValueError(f"chunk of {R} reads does not shard over {n_dev} "
                          f"devices; pad the chunk to a multiple")
+    from repro.core.index import INDEX_AXIS
+    if (stages.plan_index_kind(plan) == "partitioned"
+            and INDEX_AXIS not in mesh.axis_names):
+        raise ValueError(f"plan {plan} partitions the index over the "
+                         f"'{INDEX_AXIS}' axis, absent from mesh "
+                         f"{mesh.axis_names}")
     from repro.distributed.sharding import mapping_chunk_shardings
     sig_sh, _ = mapping_chunk_shardings(mesh)
     signals = jax.device_put(signals, sig_sh)
@@ -305,9 +340,13 @@ class Mapper:
     """Convenience host wrapper: owns the index arrays, resolves the
     backend plan once, and streams chunks through the unified driver.
 
-    ``backend`` names a registry backend ("reference"/"pallas"); the legacy
+    ``backend`` names a registry backend ("reference"/"pallas", or the
+    partitioned-index query schedules "ring"/"a2a"); the legacy
     ``use_kernels=True`` flag is shorthand for backend="pallas".  With a
-    ``mesh`` the chunks run through ``map_chunk_sharded`` instead.
+    ``mesh`` the chunks run through ``map_chunk_sharded`` instead; plans
+    whose query backend is partitioned build the ``partition_index``
+    arrays (one bucket-range partition per 'model' rank) instead of the
+    replicated table, and REQUIRE a mesh with a 'model' axis.
     """
 
     def __init__(self, index: Index, cfg: Optional[MarsConfig] = None,
@@ -319,12 +358,61 @@ class Mapper:
             stages.PALLAS if use_kernels else stages.REFERENCE)
         self.plan = stages.resolve_plan(self.cfg, self.backend)
         self.mesh = mesh
-        self.arrays = {k: jnp.asarray(v) for k, v in index_arrays(index).items()}
-        if mesh is not None:
-            from repro.distributed.sharding import mapping_chunk_shardings
-            _, rep = mapping_chunk_shardings(mesh)
-            self.arrays = {k: jax.device_put(v, rep)
-                           for k, v in self.arrays.items()}
+        if stages.plan_index_kind(self.plan) == "partitioned":
+            from repro.core.index import INDEX_AXIS, partition_index
+            from repro.distributed.sharding import partitioned_index_shardings
+            if mesh is None or INDEX_AXIS not in mesh.axis_names:
+                raise ValueError(
+                    f"backend {self.backend!r} partitions the index over "
+                    f"the '{INDEX_AXIS}' axis; pass a mesh with one")
+            parts = partition_index(index, mesh.shape[INDEX_AXIS])
+            shardings = partitioned_index_shardings(mesh)
+            self.arrays = {k: jax.device_put(jnp.asarray(v), shardings[k])
+                           for k, v in parts.items()}
+        else:
+            self.arrays = {k: jnp.asarray(v)
+                           for k, v in index_arrays(index).items()}
+            if mesh is not None:
+                from repro.distributed.sharding import mapping_chunk_shardings
+                _, rep = mapping_chunk_shardings(mesh)
+                self.arrays = {k: jax.device_put(v, rep)
+                               for k, v in self.arrays.items()}
+
+    # cfg fields known NOT to shape the index arrays — the only ones
+    # with_cfg may change.  An allowlist so a future index-shaping field
+    # fails closed instead of silently querying a stale resident table.
+    _NON_INDEX_CFG_FIELDS = frozenset((
+        "signal_len", "max_events", "tstat_window", "tstat_threshold",
+        "peak_window", "min_dwell", "max_hits_per_seed",
+        "use_freq_filter", "thresh_freq", "use_vote_filter",
+        "thresh_voting", "voting_window_log2", "vote_bins",
+        "max_anchors", "chain_band", "max_gap", "gap_cost", "skip_cost",
+        "anchor_score", "min_chain_score", "map_ratio",
+        "chain_compaction", "chain_capacity_frac", "chain_widths",
+        "anchor_select",
+    ))
+
+    def with_cfg(self, cfg: MarsConfig) -> "Mapper":
+        """A Mapper over the SAME device-resident index arrays with a
+        different config (the plan re-resolves; the index upload — or
+        partitioning — is not repeated).  Realtime mapping uses this for
+        its per-prefix-length pipeline specializations; only fields that do
+        not shape the index (signal_len, max_events, thresholds, ...) may
+        change."""
+        import copy
+        import dataclasses
+        changed = [f.name for f in dataclasses.fields(MarsConfig)
+                   if (getattr(cfg, f.name) != getattr(self.cfg, f.name)
+                       and f.name not in self._NON_INDEX_CFG_FIELDS)]
+        if changed:
+            raise ValueError(
+                f"with_cfg changes fields {changed} not known to leave the "
+                "index unchanged; build a new Mapper (the resident index "
+                "arrays could be stale)")
+        m = copy.copy(self)
+        m.cfg = cfg
+        m.plan = stages.resolve_plan(cfg, self.backend)
+        return m
 
     def chunk_fn(self):
         """The (signals, n_valid) -> MapOutput program for driver.stream_map

@@ -11,20 +11,22 @@ Each prefix length is a separate jit specialization of the same pipeline
 (static shapes); the host side advances only unresolved reads to the next
 stage — mirroring how a sequencer streams chunks per channel.  Chunking,
 padding and device streaming go through the unified driver
-(core/driver.py), the same machinery Mapper and the launcher use.
+(core/driver.py), and each stage's chunk program is a ``Mapper`` —
+the same machinery batch mapping and the launcher use, so any registry
+backend (reference / pallas / the distributed ``query:ring`` /
+``query:a2a`` schedules with a mesh) serves real-time mapping too.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import driver
 from repro.core.config import MarsConfig
-from repro.core.index import Index, index_arrays
-from repro.core.pipeline import map_chunk
+from repro.core.index import Index
+from repro.core.pipeline import Mapper
 
 
 @dataclasses.dataclass
@@ -47,16 +49,21 @@ def _stage_cfg(cfg: MarsConfig, length: int) -> MarsConfig:
 
 def map_realtime(signals: np.ndarray, index: Index, cfg: MarsConfig,
                  stages: Sequence[int] = (256, 512, 768, 1024),
-                 min_score: float = 8.0, chunk: int = 64) -> RealtimeResult:
+                 min_score: float = 8.0, chunk: int = 64,
+                 backend: Optional[str] = None, mesh=None) -> RealtimeResult:
     """signals: (R, S) f32.  `stages` are prefix lengths (last == S).
 
     A read is resolved at the earliest stage where it maps with
     score >= min_score; unresolved reads fall through to the full-length
     decision (scored with cfg.min_chain_score as usual).
+
+    ``backend``/``mesh`` select the chunk program exactly as in ``Mapper``
+    (with a mesh, ``chunk`` must divide over its devices).
     """
     R, S = signals.shape
     assert stages[-1] == S, (stages, S)
-    arrays = {k: jnp.asarray(v) for k, v in index_arrays(index).items()}
+    # ONE index upload (or partitioning); per-stage Mappers share it
+    base = Mapper(index, cfg, backend=backend, mesh=mesh)
 
     t_start = np.zeros(R, np.int64)
     score = np.zeros(R, np.float32)
@@ -72,8 +79,7 @@ def map_realtime(signals: np.ndarray, index: Index, cfg: MarsConfig,
         scfg = _stage_cfg(cfg, L)
         last = si == len(stages) - 1
         thresh = scfg.min_chain_score if last else min_score
-        fn = lambda sig, nv: map_chunk(jnp.asarray(sig), arrays, scfg,
-                                       n_valid=nv)
+        fn = base.with_cfg(scfg).chunk_fn()
 
         def sel_chunks():
             # slice the unresolved rows lazily, one chunk at a time (no

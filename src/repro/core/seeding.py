@@ -23,6 +23,44 @@ def _take_clip(table: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
     return jnp.take(table, idx, axis=0, mode="clip")
 
 
+def match_entries(keys: jnp.ndarray, valid: jnp.ndarray,
+                  got_key: jnp.ndarray, key_cnt: jnp.ndarray,
+                  cnt_bucket: jnp.ndarray, cfg: MarsConfig):
+    """The post-gather query math, shared by the replicated-table path below
+    and the partitioned-index backends (core/distributed.py) so the filter
+    rules and counter semantics live in ONE place.
+
+    keys/valid: (E,); got_key/key_cnt: (E,H) gathered entry planes;
+    cnt_bucket: (E,).  ``valid`` is the seed mask for THIS table — the full
+    seed mask on a replicated table, seed mask & partition ownership on a
+    partitioned one (each seed's bucket lives in exactly one partition, so
+    the per-partition scalars sum to the replicated-table values).
+
+    Returns (hit_valid (E,H), probes, raw, exact int32 scalars):
+    post-frequency-filter hits, bucket probes (capped at H per seed),
+    raw pre-filter hits, and the uncapped exact hit count — occurrences of
+    each matched key in the whole reference (entries_cnt), counted once per
+    seed; what an unbounded software baseline (RawHash2) would chain over.
+    """
+    H = cfg.max_hits_per_seed
+    j = jnp.arange(H, dtype=jnp.int32)[None, :]              # (1,H)
+    in_bucket = j < cnt_bucket[:, None]
+    key_match = got_key == keys[:, None]
+    raw_hit = in_bucket & key_match & valid[:, None]
+
+    if cfg.use_freq_filter:
+        hit_valid = raw_hit & (key_cnt <= cfg.thresh_freq)
+    else:
+        hit_valid = raw_hit
+
+    first_match = key_match & in_bucket & (jnp.cumsum(
+        (key_match & in_bucket).astype(jnp.int32), axis=1) == 1)
+    probes = (jnp.minimum(cnt_bucket, H) * valid).sum()
+    raw = raw_hit.sum()
+    exact = jnp.where(first_match & valid[:, None], key_cnt, 0).sum()
+    return hit_valid, probes, raw, exact
+
+
 def query_index(keys: jnp.ndarray, valid: jnp.ndarray,
                 index: Dict[str, jnp.ndarray], cfg: MarsConfig,
                 gather=None) -> Tuple[jnp.ndarray, jnp.ndarray, Dict]:
@@ -55,28 +93,14 @@ def query_index(keys: jnp.ndarray, valid: jnp.ndarray,
     t_pos = gather(index["entries_pos"], idx_c)              # (E,H) int32
     key_cnt = gather(index["entries_cnt"], idx_c)            # (E,H) int32
 
-    in_bucket = j < cnt_bucket[:, None]
-    key_match = got_key == keys[:, None]
-    raw_hit = in_bucket & key_match & valid[:, None]
-
-    if cfg.use_freq_filter:
-        freq_ok = key_cnt <= cfg.thresh_freq
-        hit_valid = raw_hit & freq_ok
-    else:
-        hit_valid = raw_hit
-
-    # uncapped exact hit count: occurrences of each matched key in the whole
-    # reference (entries_cnt), counted once per seed — what an unbounded
-    # software baseline (RawHash2) would chain over.
-    first_match = key_match & in_bucket & (jnp.cumsum(
-        (key_match & in_bucket).astype(jnp.int32), axis=1) == 1)
-    exact_hits = jnp.where(first_match & valid[:, None], key_cnt, 0).sum()
+    hit_valid, probes, raw, exact = match_entries(
+        keys, valid, got_key, key_cnt, cnt_bucket, cfg)
 
     counters = dict(
         n_seeds=valid.sum(),
-        n_bucket_probes=(jnp.minimum(cnt_bucket, H) * valid).sum(),
-        n_hits_raw=raw_hit.sum(),
+        n_bucket_probes=probes,
+        n_hits_raw=raw,
         n_hits_postfreq=hit_valid.sum(),
-        n_hits_exact=exact_hits,
+        n_hits_exact=exact,
     )
     return t_pos, hit_valid, counters

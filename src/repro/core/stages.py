@@ -75,6 +75,10 @@ PALLAS = "pallas"
 
 # Modules that register accelerated backends (imported lazily the first
 # time a plan asks for them, so importing core never pulls in Pallas).
+# The "ring"/"a2a" entries are the distributed query backends: the same
+# chunk program over a bucket-range-partitioned index, with the partition
+# schedule (collective-permute ring / one all-to-all) as just another
+# registered `query` implementation (core/distributed.py).
 _BACKEND_MODULES: Dict[str, Tuple[str, ...]] = {
     PALLAS: (
         "repro.kernels.event_detect.ops",
@@ -82,6 +86,8 @@ _BACKEND_MODULES: Dict[str, Tuple[str, ...]] = {
         "repro.kernels.bitonic_sort.ops",
         "repro.kernels.chain_dp.ops",
     ),
+    "ring": ("repro.core.distributed",),
+    "a2a": ("repro.core.distributed",),
 }
 _loaded_backend_modules = set()
 
@@ -113,12 +119,20 @@ class Backend:
 
         sort: primitive(keys (L,) int32) -> sorted keys (L,)
         dp:   primitive(q, t, valid (A,), cfg) -> (f (A,) f32, d (A,) i32)
+
+    ``index_kind`` declares the index layout the backend consumes:
+    "replicated" (the plain ``index_arrays`` dict, whole table on every
+    device) or "partitioned" (the ``partition_index`` dict with a leading
+    partition axis, range-partitioned by bucket over the mesh 'model'
+    axis).  ``plan_index_kind`` lets the chunk drivers pick matching
+    shard_map in_specs.
     """
     stage: str
     name: str
     fn: Callable[[State, MarsConfig, Dict[str, jnp.ndarray]], State]
     supports: Optional[Callable[[MarsConfig], bool]] = None
     primitive: Optional[Callable] = None
+    index_kind: str = "replicated"
 
 
 _REGISTRY: Dict[Tuple[str, str], Backend] = {}
@@ -126,14 +140,16 @@ _REGISTRY: Dict[Tuple[str, str], Backend] = {}
 
 def register_backend(stage: str, name: str, fn,
                      supports=None, replace: bool = False,
-                     primitive=None) -> None:
+                     primitive=None, index_kind: str = "replicated") -> None:
     if stage not in STAGE_ORDER:
         raise ValueError(f"unknown stage {stage!r}; stages: {STAGE_ORDER}")
+    if index_kind not in ("replicated", "partitioned"):
+        raise ValueError(f"unknown index_kind {index_kind!r}")
     key = (stage, name)
     if key in _REGISTRY and not replace:
         raise ValueError(f"backend {key} already registered")
     _REGISTRY[key] = Backend(stage=stage, name=name, fn=fn, supports=supports,
-                             primitive=primitive)
+                             primitive=primitive, index_kind=index_kind)
 
 
 def get_backend(stage: str, name: str) -> Backend:
@@ -180,6 +196,14 @@ def resolve_plan(cfg: MarsConfig, backend: str = REFERENCE) -> Plan:
             b = _REGISTRY[(stage, REFERENCE)]
         plan.append((stage, b.name))
     return tuple(plan)
+
+
+def plan_index_kind(plan: Plan) -> str:
+    """The index layout ``plan`` consumes: "replicated" (index_arrays dict,
+    whole table everywhere) or "partitioned" (partition_index dict, bucket
+    ranges over the mesh 'model' axis).  Only the query stage touches the
+    index, so its backend decides."""
+    return _REGISTRY[("query", dict(plan)["query"])].index_kind
 
 
 def execute_stages(state: State, index: Dict[str, jnp.ndarray],

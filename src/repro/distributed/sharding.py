@@ -149,12 +149,28 @@ def replicated(tree_abstract, mesh: Mesh):
 # --------------------------------------------------------------------------- #
 # MARS read mapping (data-parallel map_chunk)
 # --------------------------------------------------------------------------- #
-def mapping_chunk_shardings(mesh: Mesh):
+def mapping_chunk_shardings(mesh: Mesh, partitioned_index: bool = False):
     """Layouts for the sharded map_chunk path (core/pipeline.py): raw reads
     sharded over EVERY mesh axis (the MARS "channel stripe" — each chip
-    maps its own reads), reference index replicated on all chips.
+    maps its own reads); the reference index either replicated on all chips
+    (default) or, with ``partitioned_index=True``, range-partitioned over
+    the 'model' axis for the `query:ring` / `query:a2a` backends.
 
-    Returns (signals_sharding for (R, S), replicated_sharding for the
-    index arrays)."""
+    Returns (signals_sharding for (R, S), index sharding[s]): a single
+    replicated NamedSharding, or the per-leaf dict of
+    ``partitioned_index_shardings``."""
     axes = tuple(mesh.axis_names)
-    return (NamedSharding(mesh, P(axes, None)), NamedSharding(mesh, P()))
+    sig = NamedSharding(mesh, P(axes, None))
+    if partitioned_index:
+        return sig, partitioned_index_shardings(mesh)
+    return sig, NamedSharding(mesh, P())
+
+
+def partitioned_index_shardings(mesh: Mesh):
+    """Shardings for the ``core/index.partition_index`` pytree: the leading
+    partition axis of every leaf over ``index.INDEX_AXIS``, so each chip
+    holds exactly its resident bucket-range partition (the flash-partition
+    layout of paper Section 6.3)."""
+    from repro.core.index import INDEX_AXIS, PARTITIONED_INDEX_KEYS
+    return {k: NamedSharding(mesh, P(INDEX_AXIS))
+            for k in PARTITIONED_INDEX_KEYS}

@@ -40,9 +40,15 @@ def test_stream_map_preserves_order_and_trims(small_index, cfg_fixed,
 
 
 def test_collect_empty_stream():
+    from repro.core import MarsConfig, stages
+    from repro.core import workload
+
     out = driver.collect(iter([]))
     assert out.t_start.shape == (0,)
-    assert out.counters == {}
+    # zero-filled schema: workload/ssd_model consumers work on a 0-read job
+    assert out.counters == {k: 0 for k in stages.CHUNK_COUNTER_SCHEMA}
+    w = workload.from_counters(out.counters, MarsConfig(), index_bytes=0)
+    assert w.n_reads == 0 and w.n_samples == 0
 
 
 def test_progress_log_append_and_resume(tmp_path):

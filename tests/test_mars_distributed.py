@@ -1,5 +1,7 @@
-"""Distributed MARS mapper == single-device pipeline (both schedules),
-on an 8-virtual-device multi-pod mesh (subprocess)."""
+"""Legacy distributed-mapper wrapper == single-device pipeline (both
+schedules), on an 8-virtual-device multi-pod mesh (subprocess).  The wrapper
+is a thin shim over the shared stage-engine chunk program, so results and
+the FULL counter schema must match bit-exactly."""
 import os
 import pathlib
 import subprocess
@@ -9,7 +11,7 @@ REPO = pathlib.Path(__file__).resolve().parents[1]
 
 SCRIPT = """
 import jax, jax.numpy as jnp, numpy as np
-from repro.core import MarsConfig, build_index
+from repro.core import MarsConfig, build_index, stages
 from repro.core import distributed as D
 from repro.core.pipeline import map_chunk
 from repro.core.index import index_arrays
@@ -34,7 +36,12 @@ for sched in ("ring", "a2a"):
     t_start, score, mapped, counters = fn(signals, parts_dev)
     assert np.array_equal(np.asarray(out_ref.mapped), np.asarray(mapped)), sched
     assert np.array_equal(np.asarray(out_ref.t_start), np.asarray(t_start)), sched
-    assert int(counters["n_events"]) == int(out_ref.counters["n_events"])
+    assert np.array_equal(np.asarray(out_ref.score), np.asarray(score)), sched
+    # counter pytree is derived from CHUNK_COUNTER_SCHEMA — never a
+    # hand-listed subset that can drift
+    assert set(counters) == set(stages.CHUNK_COUNTER_SCHEMA), sched
+    for k in stages.CHUNK_COUNTER_SCHEMA:
+        assert int(counters[k]) == int(out_ref.counters[k]), (sched, k)
 print("ok")
 """
 
