@@ -3,7 +3,15 @@
 Times warmed-up, jit-compiled wall clock for one ``map_chunk`` workload,
 split by stage group:
 
-    cheap         detect -> quantize -> seed -> query -> vote (every read)
+    cheap         the shipped cheap phase (batch-level detect/query/vote,
+                  packed-entry gathers) over the whole chunk
+    cheap_pre     the pre-fast-path cheap phase on the SAME signals:
+                  per-read vmap with two-median normalization, scatter
+                  segment means, unpacked four-gather query and per-read
+                  vote scatters (for the pallas backend: the unit-batch
+                  vmapped detect kernel)
+    detect/query/vote (+ _pre)   the cheap phase's stage groups timed
+                  individually on the pipeline's real intermediate data
     chain_fast    the filter-aware chaining fast path of core/pipeline.py
                   (read compaction + select-then-sort width ladder +
                   ring-buffer banded DP) on the cheap phase's real outputs
@@ -30,9 +38,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import MarsConfig, build_index, chaining, stages
-from repro.core import pipeline
-from repro.core.index import index_arrays
+from repro.core import MarsConfig, build_index, chaining, seeding, stages
+from repro.core import events, pipeline, vote
+from repro.core.index import index_arrays, index_arrays_unpacked
 from repro.signal import simulate
 
 
@@ -68,13 +76,31 @@ def make_workload(n_reads: int = 32, ref_events: int = 20_000,
                                   seed=seed + 1, junk_frac=junk_frac)
     idx = build_index(ref.events_concat, ref.n_events, cfg)
     arrays = {k: jnp.asarray(v) for k, v in index_arrays(idx).items()}
+    arrays["_unpacked"] = {k: jnp.asarray(v)
+                           for k, v in index_arrays_unpacked(idx).items()}
     return cfg, jnp.asarray(reads.signals), arrays
+
+
+def _split_arrays(arrays):
+    """(packed online pytree, unpacked oracle pytree) from make_workload's
+    arrays dict — the jit-facing packed dict must not carry the oracle."""
+    unpacked = arrays.get("_unpacked")
+    packed = {k: v for k, v in arrays.items() if k != "_unpacked"}
+    if unpacked is None:
+        if "entries_key" not in packed:
+            raise ValueError(
+                "cheap-phase microbenchmark needs the unpacked oracle "
+                "planes: use make_workload (which embeds them under "
+                "'_unpacked') or pass index_arrays_unpacked output")
+        unpacked = packed                # caller brought an unpacked dict
+    return packed, unpacked
 
 
 def _chain_programs(cfg: MarsConfig, signals, arrays, backend: str):
     """Jit the cheap phase and the pre/fast chaining programs of one
     backend; returns (cheap_call, fast_call, pre_call) where the chain
     calls are argless closures over the cheap phase's real outputs."""
+    arrays, _ = _split_arrays(arrays)
     plan = stages.resolve_plan(cfg, backend)
     prims = stages.chain_primitives(plan, cfg)
     if prims is None:
@@ -113,6 +139,96 @@ def _chain_programs(cfg: MarsConfig, signals, arrays, backend: str):
             lambda: pre_j(q_pos, t_pos, hv))
 
 
+def _cheap_programs(cfg: MarsConfig, signals, arrays, backend: str):
+    """Jit the pre/fast cheap-phase programs of one backend, whole-phase and
+    per stage group (detect / query / vote), all on the pipeline's real
+    intermediate data.
+
+    Returns (fast_calls, pre_calls): dicts keyed "cheap"/"detect"/"query"/
+    "vote" of argless closures.  The "pre" side reconstructs the pre-fast-
+    path configuration: per-read vmap, two-median normalization + scatter
+    segment means (``events.detect_events_reference``; for the pallas
+    backend the unit-batch vmapped kernel), unpacked four-gather query
+    (``seeding.query_index_reference``) and per-read vote scatters
+    (``vote.vote_filter_reference``).
+    """
+    packed, unpacked = _split_arrays(arrays)
+    plan = stages.resolve_plan(cfg, backend)
+    prims = stages.cheap_primitives(plan, cfg)
+    if prims is None:
+        raise ValueError(f"backend {backend!r} has no batch-level cheap "
+                         f"phase to time (plan: {plan})")
+    gather = prims.gather
+
+    # ---- detect ----
+    if prims.detector is not None:
+        det_fast = jax.jit(prims.detector)
+        det_prim = stages.get_backend("detect", backend).primitive
+        det_pre = jax.jit(jax.vmap(
+            lambda s: tuple(x[0] for x in det_prim(s[None], cfg))))
+    else:
+        det_fast = jax.jit(jax.vmap(
+            lambda s: events.detect_events(s, cfg)[:2]))
+        det_pre = jax.jit(jax.vmap(
+            lambda s: events.detect_events_reference(s, cfg)[:2]))
+
+    # real intermediate data for the later stage groups
+    q_pos, t_pos, hit_valid, counters = jax.jit(
+        lambda s: pipeline.cheap_phase(s, packed, cfg, plan))(signals)
+    means, _n = det_fast(signals)
+
+    def quant_seed(ev, n):
+        st = stages.execute_stages({"events": ev, "n_events": n,
+                                    "counters": {}},
+                                   packed, cfg, plan, ("quantize", "seed"))
+        return st["keys"], st["seed_valid"]
+    keys, seed_valid = jax.jit(jax.vmap(quant_seed))(
+        means, counters["n_events"])
+
+    # ---- query ----
+    query_fast = jax.jit(lambda k, v: seeding.query_index(
+        k, v, packed, cfg, gather=gather))
+    query_pre = jax.jit(jax.vmap(lambda k, v: seeding.query_index_reference(
+        k, v, unpacked, cfg, gather=gather)))
+
+    # ---- vote ----
+    vote_fast = jax.jit(lambda q, t, h: vote.vote_filter(q, t, h, cfg))
+    vote_pre = jax.jit(jax.vmap(
+        lambda q, t, h: vote.vote_filter_reference(q, t, h, cfg)))
+
+    # ---- whole cheap phase ----
+    cheap_fast = jax.jit(lambda s: pipeline.cheap_phase(s, packed, cfg, plan))
+
+    def cheap_pre_read(signal):
+        ev, n, _ = (events.detect_events_reference(signal, cfg)
+                    if prims.detector is None else
+                    tuple(x[0] for x in det_prim(signal[None], cfg)) + (None,))
+        st = stages.execute_stages({"events": ev, "n_events": n,
+                                    "counters": {}},
+                                   packed, cfg, plan, ("quantize", "seed"))
+        tp, hv, _c = seeding.query_index_reference(
+            st["keys"], st["seed_valid"], unpacked, cfg, gather=gather)
+        qp = jnp.broadcast_to(
+            jnp.arange(cfg.max_events, dtype=jnp.int32)[:, None], tp.shape)
+        hv, _c2 = vote.vote_filter_reference(qp, tp, hv, cfg)
+        return qp, tp, hv
+    cheap_pre = jax.jit(jax.vmap(cheap_pre_read))
+
+    fast_calls = {
+        "cheap": lambda: cheap_fast(signals),
+        "detect": lambda: det_fast(signals),
+        "query": lambda: query_fast(keys, seed_valid),
+        "vote": lambda: vote_fast(q_pos, t_pos, hit_valid),
+    }
+    pre_calls = {
+        "cheap": lambda: cheap_pre(signals),
+        "detect": lambda: det_pre(signals),
+        "query": lambda: query_pre(keys, seed_valid),
+        "vote": lambda: vote_pre(q_pos, t_pos, hit_valid),
+    }
+    return fast_calls, pre_calls
+
+
 def _interleaved(fast_c, pre_c, rounds: int):
     """Paired pre/fast timing: both programs per round, so machine-speed
     swings between rounds hit both equally.  Returns (min fast, min pre,
@@ -139,11 +255,12 @@ def bench_backend(cfg: MarsConfig, signals, arrays, backend: str,
                   repeats: int = 5) -> Dict[str, float]:
     """Stage-group timings (seconds) for one registry backend."""
     cheap_c, fast_c, pre_c = _chain_programs(cfg, signals, arrays, backend)
+    packed, _ = _split_arrays(arrays)
     plan = stages.resolve_plan(cfg, backend)
-    chunk_j = lambda: pipeline.map_chunk(signals, arrays, cfg, plan=plan)
+    chunk_j = lambda: pipeline.map_chunk(signals, packed, cfg, plan=plan)
     cfg_pre = cfg.replace(chain_compaction=False)
     plan_pre = stages.resolve_plan(cfg_pre, backend)
-    chunk_pre_j = lambda: pipeline.map_chunk(signals, arrays, cfg_pre,
+    chunk_pre_j = lambda: pipeline.map_chunk(signals, packed, cfg_pre,
                                              plan=plan_pre)
 
     tf, tp, ratio = _interleaved(fast_c, pre_c, rounds=max(3 * repeats, 15))
@@ -155,6 +272,17 @@ def bench_backend(cfg: MarsConfig, signals, arrays, backend: str,
         "map_chunk": time_fn(chunk_j, repeats=repeats),
         "map_chunk_pre": time_fn(chunk_pre_j, repeats=repeats),
     }
+
+    # cheap-phase pre/post groups (pre side is expensive on the pallas
+    # backend — the unit-batch vmapped kernel — so fewer rounds)
+    cf, cp = _cheap_programs(cfg, signals, arrays, backend)
+    ctf, ctp, cratio = _interleaved(cf["cheap"], cp["cheap"],
+                                    rounds=max(repeats, 3))
+    groups.update(cheap_fast=ctf, cheap_pre=ctp, cheap_speedup=cratio)
+    for g in ("detect", "query", "vote"):
+        gtf, gtp, gratio = _interleaved(cf[g], cp[g], rounds=max(repeats, 3))
+        groups.update({f"{g}_fast": gtf, f"{g}_pre": gtp,
+                       f"{g}_speedup": gratio})
     return groups
 
 
@@ -174,6 +302,18 @@ def bench_chain_ratio(cfg: MarsConfig, signals, arrays,
     tf, tp, ratio = _interleaved(fast_c, pre_c, rounds)
     return {"chain_fast_min": tf, "chain_pre_min": tp, "rounds": rounds,
             "chain_speedup_median": ratio}
+
+
+def bench_cheap_ratio(cfg: MarsConfig, signals, arrays,
+                      backend: str = stages.REFERENCE,
+                      rounds: int = 25) -> Dict[str, float]:
+    """The cheap-phase twin of ``bench_chain_ratio``: interleaved pre/fast
+    whole-cheap-phase rounds, median paired ratio as the gate estimator."""
+    fast_calls, pre_calls = _cheap_programs(cfg, signals, arrays, backend)
+    tf, tp, ratio = _interleaved(fast_calls["cheap"], pre_calls["cheap"],
+                                 rounds)
+    return {"cheap_fast_min": tf, "cheap_pre_min": tp, "rounds": rounds,
+            "cheap_speedup_median": ratio}
 
 
 def run(n_reads: int = 32, ref_events: int = 20_000, junk_frac: float = 0.5,

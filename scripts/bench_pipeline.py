@@ -6,9 +6,9 @@ to BENCH_pipeline.json at the repo root (the per-PR perf trajectory file).
     scripts/bench_pipeline.py --quick     # measure the quick profile only
     scripts/bench_pipeline.py --check     # quick measurement, compared to
                                           # the committed baseline: exits 1
-                                          # if the chaining-phase time
-                                          # regressed > 20% (skips cleanly
-                                          # when no baseline exists)
+                                          # if the chaining- OR cheap-phase
+                                          # time regressed > 20% (skips
+                                          # cleanly when no baseline exists)
 
 Profiles are compared like-for-like (quick vs quick), so --check is immune
 to the workload-size difference between profiles.  See EXPERIMENTS.md for
@@ -50,6 +50,9 @@ def measure(profiles, **kw):
         print(f"[bench_pipeline] {name}: chain_pre={ref['chain_pre']*1e3:.2f}ms "
               f"chain_fast={ref['chain_fast']*1e3:.2f}ms "
               f"speedup={ref['chain_speedup']:.2f}x", flush=True)
+        print(f"[bench_pipeline] {name}: cheap_pre={ref['cheap_pre']*1e3:.2f}ms "
+              f"cheap_fast={ref['cheap_fast']*1e3:.2f}ms "
+              f"speedup={ref['cheap_speedup']:.2f}x", flush=True)
     return out
 
 
@@ -71,49 +74,61 @@ def write(path: pathlib.Path, measured) -> None:
 
 
 def measure_gate():
-    """The interleaved pre/fast chaining ratio on the quick workload (the
-    machine-speed-independent gate metric; see microbench.bench_chain_ratio).
-    """
+    """The interleaved pre/fast ratios on the quick workload — one record
+    per gated phase (chain and cheap), both machine-speed independent (see
+    microbench.bench_chain_ratio / bench_cheap_ratio)."""
     from benchmarks import microbench
     params = PROFILES["quick"]
-    print(f"[bench_pipeline] measuring interleaved chain pre/fast ratio "
-          f"({params}) ...", flush=True)
+    print(f"[bench_pipeline] measuring interleaved chain+cheap pre/fast "
+          f"ratios ({params}) ...", flush=True)
     cfg, signals, arrays = microbench.make_workload(
         params["n_reads"], params["ref_events"], params["junk_frac"])
-    rec = microbench.bench_chain_ratio(cfg, signals, arrays, CHECK_BACKEND,
-                                       rounds=CHECK_REPEATS)
-    rec["backend"] = CHECK_BACKEND
-    return rec
+    chain = microbench.bench_chain_ratio(cfg, signals, arrays, CHECK_BACKEND,
+                                         rounds=CHECK_REPEATS)
+    chain["backend"] = CHECK_BACKEND
+    cheap = microbench.bench_cheap_ratio(cfg, signals, arrays, CHECK_BACKEND,
+                                         rounds=CHECK_REPEATS)
+    cheap["backend"] = CHECK_BACKEND
+    return chain, cheap
 
 
 def check(path: pathlib.Path) -> int:
-    """Regression gate on the chaining phase, machine-speed independent:
-    compares the median interleaved chain_pre/chain_fast speedup ratio
-    against the baseline's identically-measured ``chain_gate`` record.
-    A >20% rise in normalized chaining-phase time fails."""
+    """Regression gate on the chaining AND cheap phases, machine-speed
+    independent: compares the median interleaved pre/fast speedup ratio of
+    each phase against the baseline's identically-measured ``chain_gate`` /
+    ``cheap_gate`` records.  A >20% rise in either phase's normalized time
+    fails; a phase whose baseline record is absent skips cleanly."""
     if not path.exists():
         print(f"[bench_pipeline] no baseline at {path}; skipping "
               "regression check")
         return 0
     base = json.loads(path.read_text())
     prof = base.get("profiles", {}).get("quick", {})
-    gate = prof.get("chain_gate")
-    if not gate:
-        print("[bench_pipeline] baseline has no quick 'chain_gate' record; "
-              "skipping")
+    if not (prof.get("chain_gate") or prof.get("cheap_gate")):
+        print("[bench_pipeline] baseline has no quick 'chain_gate'/"
+              "'cheap_gate' record; skipping")
         return 0
-    baseline = gate["chain_speedup_median"]
-    cur = measure_gate()
-    ratio = baseline / cur["chain_speedup_median"]  # >1: normalized time grew
-    print(f"[bench_pipeline] chain speedup ({cur['backend']}): baseline "
-          f"{baseline:.2f}x, current {cur['chain_speedup_median']:.2f}x "
-          f"-> normalized chain time {ratio:.2f}x")
-    if ratio > REGRESSION_TOL:
-        print(f"[bench_pipeline] FAIL: chaining phase regressed "
-              f">{(REGRESSION_TOL - 1) * 100:.0f}%")
-        return 1
-    print("[bench_pipeline] OK")
-    return 0
+    chain_cur, cheap_cur = measure_gate()
+    failed = 0
+    for phase, cur in (("chain", chain_cur), ("cheap", cheap_cur)):
+        gate = prof.get(f"{phase}_gate")
+        if not gate:
+            print(f"[bench_pipeline] baseline has no quick '{phase}_gate' "
+                  "record; skipping that phase")
+            continue
+        baseline = gate[f"{phase}_speedup_median"]
+        current = cur[f"{phase}_speedup_median"]
+        ratio = baseline / current          # >1: normalized time grew
+        print(f"[bench_pipeline] {phase} speedup ({cur['backend']}): "
+              f"baseline {baseline:.2f}x, current {current:.2f}x "
+              f"-> normalized {phase} time {ratio:.2f}x")
+        if ratio > REGRESSION_TOL:
+            print(f"[bench_pipeline] FAIL: {phase} phase regressed "
+                  f">{(REGRESSION_TOL - 1) * 100:.0f}%")
+            failed = 1
+    if not failed:
+        print("[bench_pipeline] OK")
+    return failed
 
 
 def main(argv=None) -> int:
@@ -130,9 +145,11 @@ def main(argv=None) -> int:
         return check(args.out)
     profiles = ("quick",) if args.quick else ("quick", "full")
     measured = measure(profiles)
-    # every write refreshes the gate baseline with the same interleaved
-    # estimator --check uses, so the comparison is like-for-like
-    measured["quick"]["chain_gate"] = measure_gate()
+    # every write refreshes the gate baselines with the same interleaved
+    # estimators --check uses, so the comparison is like-for-like
+    chain_gate, cheap_gate = measure_gate()
+    measured["quick"]["chain_gate"] = chain_gate
+    measured["quick"]["cheap_gate"] = cheap_gate
     write(args.out, measured)
     return 0
 

@@ -3,12 +3,12 @@
 #
 #   scripts/run_tier1.sh            # fast pass (skips @slow property sweeps)
 #   scripts/run_tier1.sh --all      # everything, including @slow
-#   scripts/run_tier1.sh --bench    # fast pass + chaining-phase perf gate:
-#                                   # runs scripts/bench_pipeline.py --check
-#                                   # (quick profile) and fails on a >20%
-#                                   # regression vs the committed
-#                                   # BENCH_pipeline.json (skips cleanly
-#                                   # when no baseline exists)
+#   scripts/run_tier1.sh --bench    # fast pass + chain+cheap phase perf
+#                                   # gates: runs scripts/bench_pipeline.py
+#                                   # --check (quick profile) and fails on a
+#                                   # >20% regression of either phase vs the
+#                                   # committed BENCH_pipeline.json (skips
+#                                   # cleanly when no baseline exists)
 #   scripts/run_tier1.sh tests/test_pipeline.py   # extra pytest args pass through
 set -euo pipefail
 cd "$(dirname "$0")/.."

@@ -13,13 +13,14 @@ from repro.core import driver, stages
 from repro.core.config import (DEFAULT, MODE_MS_FIXED, MODE_MS_FLOAT,
                                MODE_RH2, MODES, MarsConfig)
 from repro.core.index import (Index, build_index, index_arrays,
-                              partition_index)
+                              index_arrays_unpacked, partition_index)
 from repro.core.pipeline import (MapOutput, Mapper, map_chunk,
                                  map_chunk_sharded, map_read, score_accuracy)
 
 __all__ = [
     "DEFAULT", "MODES", "MODE_RH2", "MODE_MS_FLOAT", "MODE_MS_FIXED",
-    "MarsConfig", "Index", "build_index", "index_arrays", "partition_index",
+    "MarsConfig", "Index", "build_index", "index_arrays",
+    "index_arrays_unpacked", "partition_index",
     "MapOutput", "Mapper", "map_chunk", "map_chunk_sharded", "map_read",
     "driver", "stages", "score_accuracy",
 ]

@@ -71,17 +71,21 @@ def _query_partition(keys: jnp.ndarray, valid: jnp.ndarray,
     local_b = bucket & ((1 << bl_log) - 1)
     mine = (owner == my_part) & valid
 
+    # the same two fused gathers as seeding.query_index, against the
+    # resident partition's packed planes
     bstart = part["p_bucket_start"]
-    start = jnp.take(bstart, local_b, axis=0, mode="clip")
-    end = jnp.take(bstart, local_b + 1, axis=0, mode="clip")
+    start_end = jnp.take(bstart, jnp.stack([local_b, local_b + 1]), axis=0,
+                         mode="clip")                        # (2,E)
+    start, end = start_end[0], start_end[1]
     cnt_bucket = end - start
     j = jnp.arange(H, dtype=jnp.int32)[None, :]
     idx = start[:, None] + j                                 # (E,H)
-    n_entries = part["p_entries_key"].shape[0]
+    n_entries = part["p_entries_packed"].shape[-1]
     idx_c = jnp.minimum(idx, n_entries - 1)
-    got_key = jnp.take(part["p_entries_key"], idx_c, axis=0, mode="clip")
-    t_pos = jnp.take(part["p_entries_pos"], idx_c, axis=0, mode="clip")
-    key_cnt = jnp.take(part["p_entries_cnt"], idx_c, axis=0, mode="clip")
+    ent = jnp.take(part["p_entries_packed"], idx_c, axis=1,
+                   mode="clip")                              # (2,E,H)
+    got_key, key_cnt = seeding.unpack_entries(ent[0], keys, cfg)
+    t_pos = ent[1]
 
     hit, probes, raw, exact = seeding.match_entries(
         keys, mine, got_key, key_cnt, cnt_bucket, cfg)

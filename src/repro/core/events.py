@@ -11,6 +11,15 @@ scrappie, with two arithmetic paths:
 Static shapes: each read yields exactly `max_events` event slots plus a
 validity count.  Segment means are computed as a one-hot segment-sum — the
 same formulation the `event_detect` Pallas kernel maps onto the MXU.
+
+Cheap-phase fast path (this PR's half of the PR-2 treatment): the float
+normalization sorts the signal ONCE and derives both the median and the MAD
+from the shared sorted array (``robust_normalize``); the fixed-point segment
+reduction replaces the two segment-sum scatters with cumsum-at-boundary
+gathers (``segment_means``).  Both are bit-identical to the previous
+implementations — kept here as ``robust_normalize_reference`` /
+``segment_means_reference`` parity oracles, exactly as PR 2 kept
+``chain_dp_reference``.
 """
 from __future__ import annotations
 
@@ -21,20 +30,82 @@ from repro.core.config import MarsConfig
 
 _EPS = 1e-6
 
+# Early-quantization clip: normalized signals are clipped to +-SIGNAL_CLIP
+# sigmas before the Q-format conversion, so |xq| <= SIGNAL_CLIP * 2^frac_bits
+# — the static amplitude bound the integer boundary test's overflow check
+# (fixed_tstat_bounds) is derived from.
+SIGNAL_CLIP = 8.0
+
 
 # --------------------------------------------------------------------------- #
 # Normalization + early quantization (paper Section 5.2)
 # --------------------------------------------------------------------------- #
-def robust_normalize(signal: jnp.ndarray) -> jnp.ndarray:
-    """Per-read median/MAD normalization (f32).  signal: (..., S)."""
+def robust_normalize_reference(signal: jnp.ndarray) -> jnp.ndarray:
+    """Pre-fast-path per-read median/MAD normalization: two full
+    ``jnp.median`` sorts per read.  Parity oracle + the "pre" side of the
+    cheap-phase microbenchmark."""
     med = jnp.median(signal, axis=-1, keepdims=True)
     mad = jnp.median(jnp.abs(signal - med), axis=-1, keepdims=True)
     scale = 1.4826 * mad + _EPS
     return (signal - med) / scale
 
 
+def _median_two_sorted(a: jnp.ndarray, b: jnp.ndarray, m1: int, m2: int):
+    """Values at ranks ``m1 <= m2`` of the merged multiset of two sorted 1-D
+    arrays, via stable-merge rank arithmetic (no sort of the union).
+
+    rank(a[i]) counts b-elements strictly smaller; rank(b[j]) counts
+    a-elements smaller-or-equal — together a permutation of 0..len(a+b)-1
+    (the stable merge), so each rank selects exactly one element.
+    """
+    ra = jnp.arange(a.shape[0]) + jnp.searchsorted(b, a, side="left")
+    rb = jnp.arange(b.shape[0]) + jnp.searchsorted(a, b, side="right")
+
+    def at(k):
+        return (jnp.sum(jnp.where(ra == k, a, 0.0)) +
+                jnp.sum(jnp.where(rb == k, b, 0.0)))
+
+    return at(m1), at(m2)
+
+
+def _robust_normalize_row(signal: jnp.ndarray) -> jnp.ndarray:
+    """One-sort median/MAD of a 1-D signal, bit-identical to the reference.
+
+    The median interpolation mirrors jnp.quantile's "linear" method at
+    q=0.5 exactly (lo*0.5 + hi*0.5 — for odd S, lo == hi).  |x - med| over
+    the sorted signal is two sorted runs (descending-left, ascending-right
+    of the median), so the MAD is the median of a 2-way merge — rank
+    selection instead of a second full sort.
+    """
+    S = signal.shape[0]
+    m1, m2 = (S - 1) // 2, S // 2
+    half = jnp.float32(0.5)
+    xs = jnp.sort(signal)
+    med = xs[m1] * half + xs[m2] * half
+    h = S // 2
+    dev_lo = (med - xs[:h])[::-1]        # ascending: xs[:h] <= med
+    dev_hi = xs[h:] - med                # ascending: xs[h:] >= med
+    lo, hi = _median_two_sorted(dev_lo, dev_hi, m1, m2)
+    mad = lo * half + hi * half
+    scale = 1.4826 * mad + _EPS
+    return (signal - med) / scale
+
+
+def robust_normalize(signal: jnp.ndarray) -> jnp.ndarray:
+    """Per-read median/MAD normalization (f32).  signal: (..., S).
+
+    One shared sort per read: the MAD median is rank-selected from the
+    sorted signal instead of sorting |x - med| again.  Bit-identical to
+    ``robust_normalize_reference`` (asserted by tests/test_cheap_fastpath).
+    """
+    shape = signal.shape
+    rows = signal.reshape(-1, shape[-1])
+    out = jax.vmap(_robust_normalize_row)(rows)
+    return out.reshape(shape)
+
+
 def quantize_signal_fixed(signal_norm: jnp.ndarray, frac_bits: int,
-                          clip: float = 8.0) -> jnp.ndarray:
+                          clip: float = SIGNAL_CLIP) -> jnp.ndarray:
     """Early quantization: normalized f32 -> Q(15-f).f int16."""
     scaled = jnp.clip(signal_norm, -clip, clip) * (1 << frac_bits)
     return jnp.round(scaled).astype(jnp.int16)
@@ -85,6 +156,66 @@ def boundary_mask_float(x: jnp.ndarray, cfg: MarsConfig) -> jnp.ndarray:
     return _peak_pick(t, t > cfg.tstat_threshold, cfg)
 
 
+def fixed_tstat_bounds(cfg: MarsConfig):
+    """Static worst-case int32 magnitudes of the integer boundary test.
+
+    Derived from the early-quantization amplitude bound
+    M = SIGNAL_CLIP * 2^frac_bits (|xq| <= M by construction):
+
+        sq      <= w * M^2            (windowed sum of squares)
+        |diff|  <= (2*w*M) >> 2       (prescaled window-sum difference)
+        lhs     <= diff^2 * w
+        |ssd|   <= w^2 * M^2          (w*sq - sum^2, both sides)
+        rhs     <= tau2 * ((2*w^2*M^2) >> 4 + eps)
+
+    Returns a dict of the four bounds; every one must stay below 2^31 for
+    the int32 arithmetic of ``boundary_mask_fixed`` (and the `event_detect`
+    Pallas kernel, which evaluates the identical expressions) to be exact.
+    The cumsums inside ``_windowed_sums`` may wrap — two's-complement
+    differences recover the window sums exactly as long as the window sums
+    themselves fit, which the ``sq`` bound guarantees.
+    """
+    w = cfg.tstat_window
+    M = int(SIGNAL_CLIP * (1 << cfg.frac_bits))
+    tau2 = int(round(cfg.tstat_threshold ** 2))
+    eps = 1 << max(2 * cfg.frac_bits - 8, 0)
+    diff = (2 * w * M) >> 2
+    return dict(
+        sq=w * M * M,
+        ssd=2 * w * w * M * M,
+        lhs=diff * diff * w,
+        rhs=tau2 * (((2 * w * w * M * M) >> 4) + eps),
+    )
+
+
+def fixed_tstat_in_range(cfg: MarsConfig) -> bool:
+    """True iff the integer boundary test cannot overflow int32 for cfg."""
+    return max(fixed_tstat_bounds(cfg).values()) < (1 << 31)
+
+
+def check_fixed_tstat_range(cfg: MarsConfig) -> None:
+    """Static overflow guard for the fixed-point boundary test.
+
+    ``diff * diff * w`` grows as tstat_window^3 x (Q-format amplitude)^2 —
+    beyond the bound it silently wraps int32 and flips boundary decisions.
+    Fail fast at trace time instead (tests/test_cheap_fastpath pins the
+    boundary: tstat_window=12 is the largest safe window at frac_bits=8).
+    """
+    if fixed_tstat_in_range(cfg):
+        return
+    w_max = 0
+    while fixed_tstat_in_range(cfg.replace(tstat_window=w_max + 1)):
+        w_max += 1
+    bounds = fixed_tstat_bounds(cfg)
+    worst = max(bounds, key=bounds.get)
+    raise ValueError(
+        f"fixed-point boundary test overflows int32 for tstat_window="
+        f"{cfg.tstat_window} at frac_bits={cfg.frac_bits} ({worst} bound "
+        f"{bounds[worst]:#x} >= 2^31); the largest safe tstat_window for "
+        f"this config is {w_max} — lower tstat_window/frac_bits or use the "
+        "float path (fixed_point=False)")
+
+
 def boundary_mask_fixed(xq: jnp.ndarray, cfg: MarsConfig) -> jnp.ndarray:
     """Integer (sqrt-free) boundary test on int16 Q-format signal.
 
@@ -92,8 +223,11 @@ def boundary_mask_fixed(xq: jnp.ndarray, cfg: MarsConfig) -> jnp.ndarray:
     where ssd = w*sq - sum^2 (scaled sum of squared deviations), in int32
     with a >>2 / >>4 prescale on the two sides to stay in range — equivalent
     to tstat > tau without division or sqrt, matching what a word-serial
-    Arithmetic Unit would evaluate (add/mul/compare only).
+    Arithmetic Unit would evaluate (add/mul/compare only).  Configs whose
+    worst case exceeds int32 are rejected statically
+    (``check_fixed_tstat_range``).
     """
+    check_fixed_tstat_range(cfg)
     w = cfg.tstat_window
     x32 = xq.astype(jnp.int32)
     sum_l, sum_r, sq_l, sq_r = _windowed_sums(x32, w)
@@ -146,15 +280,17 @@ def _peak_pick(score: jnp.ndarray, above: jnp.ndarray,
 
 
 # --------------------------------------------------------------------------- #
-# Segment means via one-hot segment-sum
+# Segment means: one-hot segment-sum (oracle) / cumsum-at-boundary gathers
 # --------------------------------------------------------------------------- #
-def segment_means(x: jnp.ndarray, boundaries: jnp.ndarray, valid_len: int,
-                  max_events: int):
-    """x: (S,) signal, boundaries: (S,) bool.  Returns (means (E,), n_events).
+def segment_means_reference(x: jnp.ndarray, boundaries: jnp.ndarray,
+                            valid_len: int, max_events: int):
+    """Pre-fast-path segment reduction: two ``segment_sum`` scatters.
+    Parity oracle + the "pre" side of the cheap-phase microbenchmark.
 
-    Event id at sample i = cumsum(boundaries)[i] clipped to E-1; samples past
-    valid_len are dropped.  Means = segsum(x)/segsum(1) — identical math to the
-    Pallas kernel's one-hot matmul.
+    x: (S,) signal, boundaries: (S,) bool.  Returns (means (E,), n_events,
+    counts).  Event id at sample i = cumsum(boundaries)[i] clipped to E-1;
+    samples past valid_len are dropped.  Means = segsum(x)/segsum(1) —
+    identical math to the Pallas kernel's one-hot matmul.
     """
     S = x.shape[0]
     sample_valid = jnp.arange(S) < valid_len
@@ -171,6 +307,43 @@ def segment_means(x: jnp.ndarray, boundaries: jnp.ndarray, valid_len: int,
     return means, n_events, cnts
 
 
+def segment_means(x: jnp.ndarray, boundaries: jnp.ndarray, valid_len: int,
+                  max_events: int, max_abs: int = None):
+    """Segment reduction via cumsum-at-boundary gathers (no scatters).
+
+    Same contract as ``segment_means_reference``.  The event-id array is
+    nondecreasing, so each event's sample range is [starts[e], starts[e+1])
+    with ``starts = searchsorted(eid, 0..E)``, and per-event sums are
+    differences of ONE prefix sum — gathers only, which vmap into a single
+    batched gather across a chunk instead of per-read scatters.
+
+    Bit-identical to the reference for integer-valued ``x`` whose whole-
+    signal prefix sum stays exact in f32: the caller must certify the
+    static amplitude bound ``max_abs`` (for the MARS fixed-point path,
+    SIGNAL_CLIP * 2^frac_bits) and ``S * max_abs`` must stay below 2^24.
+    Anything else — float signals (whose scatter addition order must be
+    preserved exactly), an uncertified bound, or a signal long/loud enough
+    to round the prefix sum — falls back to the scatter-based reference.
+    """
+    if (not jnp.issubdtype(x.dtype, jnp.integer) or max_abs is None
+            or x.shape[0] * max_abs >= (1 << 24)):
+        return segment_means_reference(x, boundaries, valid_len, max_events)
+    S = x.shape[0]
+    sample_valid = jnp.arange(S) < valid_len
+    eid = jnp.cumsum(boundaries.astype(jnp.int32))
+    eid = jnp.minimum(eid, max_events - 1)
+    g = jnp.where(sample_valid, eid, max_events)            # nondecreasing
+    starts = jnp.searchsorted(
+        g, jnp.arange(max_events + 1, dtype=jnp.int32), side="left")
+    xf = jnp.where(sample_valid, x.astype(jnp.float32), 0.0)
+    c = jnp.concatenate([jnp.zeros((1,), jnp.float32), jnp.cumsum(xf)])
+    sums = c[starts[1:]] - c[starts[:-1]]
+    cnts = (starts[1:] - starts[:-1]).astype(jnp.float32)
+    means = sums / jnp.maximum(cnts, 1.0)
+    n_events = jnp.minimum(eid[valid_len - 1] + 1, max_events)
+    return means, n_events, cnts
+
+
 def detect_events(signal: jnp.ndarray, cfg: MarsConfig):
     """Full per-read event detection.  signal: (S,) f32 raw.
 
@@ -181,8 +354,9 @@ def detect_events(signal: jnp.ndarray, cfg: MarsConfig):
     if cfg.early_quantization and cfg.fixed_point:
         xq = quantize_signal_fixed(x, cfg.frac_bits)
         b = boundary_mask_fixed(xq, cfg)
-        means, n, cnts = segment_means(xq.astype(jnp.int32), b,
-                                       signal.shape[0], cfg.max_events)
+        means, n, cnts = segment_means(
+            xq.astype(jnp.int32), b, signal.shape[0], cfg.max_events,
+            max_abs=int(SIGNAL_CLIP * (1 << cfg.frac_bits)))
         means = means / float(1 << cfg.frac_bits)
     elif cfg.early_quantization:
         # early quantization, float compute: quantize/dequantize to model the
@@ -199,3 +373,27 @@ def detect_events(signal: jnp.ndarray, cfg: MarsConfig):
 
 detect_events_batch = jax.vmap(detect_events, in_axes=(0, None),
                                out_axes=(0, 0, 0))
+
+
+def detect_events_reference(signal: jnp.ndarray, cfg: MarsConfig):
+    """Pre-fast-path ``detect_events``: two-sort median/MAD normalization +
+    scatter-based segment reduction.  Parity oracle and the "pre" side of
+    the cheap-phase microbenchmark (benchmarks/microbench.py)."""
+    x = robust_normalize_reference(signal)
+    if cfg.early_quantization and cfg.fixed_point:
+        xq = quantize_signal_fixed(x, cfg.frac_bits)
+        b = boundary_mask_fixed(xq, cfg)
+        means, n, cnts = segment_means_reference(
+            xq.astype(jnp.int32), b, signal.shape[0], cfg.max_events)
+        means = means / float(1 << cfg.frac_bits)
+    elif cfg.early_quantization:
+        xq = dequantize_fixed(quantize_signal_fixed(x, cfg.frac_bits),
+                              cfg.frac_bits)
+        b = boundary_mask_float(xq, cfg)
+        means, n, cnts = segment_means_reference(xq, b, signal.shape[0],
+                                                 cfg.max_events)
+    else:
+        b = boundary_mask_float(x, cfg)
+        means, n, cnts = segment_means_reference(x, b, signal.shape[0],
+                                                 cfg.max_events)
+    return means, n, cnts

@@ -12,6 +12,24 @@ and stored in a direct-address bucket table:
 
 Built offline with numpy (the paper treats indexing as offline as well); the
 arrays are then device_put / sharded for the online mapping stage.
+
+Packed online layout (cheap-phase fast path): every in-bucket entry's low
+``hash_bits`` key bits equal its bucket id — implied by position, so the
+online entry table stores the count in that field instead, and each entry
+is ONE two-word row:
+
+    entries_packed : (2, N) int32
+        row 0   (key & ~bucket_mask) | cnt      key distinguisher + count
+        row 1   t_pos                           seed position
+
+``seeding.query_index`` therefore serves a whole chunk with exactly TWO
+gathers (the fused bucket-boundary lookup and one entry-row lookup) instead
+of four table reads, and the pLUTo kernel answers each entry query with one
+packed-row sweep (kernels/pluto_lookup reads both words per activation,
+like pLUTo's row-wide sense amplifiers).  ``build_index`` guards the
+packing statically: every count must fit the ``hash_bits`` spare bits.  The
+unpacked per-field arrays remain on the Index (offline source of truth,
+``index_arrays_unpacked``) for the parity oracle and the partition builder.
 """
 from __future__ import annotations
 
@@ -37,6 +55,36 @@ class Index:
     def nbytes(self) -> int:
         return (self.bucket_start.nbytes + self.entries_key.nbytes +
                 self.entries_pos.nbytes + self.entries_cnt.nbytes)
+
+    @property
+    def entries_packed(self) -> np.ndarray:
+        """(2, N) int32 packed online entry rows (module docstring).
+        Packed once on first access (build_index's overflow guard) and
+        memoized — index_arrays/partition_index reuse the same array."""
+        packed = getattr(self, "_entries_packed", None)
+        if packed is None:
+            packed = pack_entries(self.entries_key, self.entries_pos,
+                                  self.entries_cnt, self.cfg)
+            self._entries_packed = packed
+        return packed
+
+
+def pack_entries(keys: np.ndarray, pos: np.ndarray, cnt: np.ndarray,
+                 cfg: MarsConfig) -> np.ndarray:
+    """Interleave (key, cnt, pos) into the (2, N) int32 online entry rows.
+
+    The count occupies the low ``hash_bits`` (bucket-implied) key bits; a
+    count that does not fit would corrupt its neighbour's key distinguisher,
+    so overflow fails loudly here (``build_index`` calls this at build time).
+    """
+    mask = np.uint32(cfg.n_buckets - 1)
+    if cnt.size and int(cnt.max()) >= cfg.n_buckets:
+        raise ValueError(
+            f"entry count {int(cnt.max())} does not fit the {cfg.hash_bits} "
+            "bucket-implied spare bits of the packed entry plane "
+            "(entries_packed); raise hash_bits or deduplicate the reference")
+    keycnt = (keys.astype(np.uint32) & ~mask) | cnt.astype(np.uint32)
+    return np.stack([keycnt.view(np.int32), pos.astype(np.int32)])
 
 
 def quantize_reference_events(events: np.ndarray, cfg: MarsConfig) -> np.ndarray:
@@ -96,7 +144,7 @@ def build_index(ref_events_concat: np.ndarray, n_ref_events: int,
     np.add.at(bucket_start, bucket_s + 1, 1)
     bucket_start = np.cumsum(bucket_start)
 
-    return Index(
+    idx = Index(
         bucket_start=bucket_start.astype(np.int32),
         entries_key=keys_s.astype(np.uint32),
         entries_pos=pos_s.astype(np.int32),
@@ -105,10 +153,22 @@ def build_index(ref_events_concat: np.ndarray, n_ref_events: int,
         n_entries=int(keys_s.shape[0]),
         cfg=cfg,
     )
+    idx.entries_packed                 # packed-plane overflow guard, build time
+    return idx
 
 
 def index_arrays(index: Index):
-    """The jit-friendly pytree of device arrays."""
+    """The jit-friendly pytree of device arrays — packed two-plane layout
+    (``seeding.query_index``'s two-gather fast path)."""
+    return dict(
+        bucket_start=index.bucket_start,
+        entries_packed=index.entries_packed,
+    )
+
+
+def index_arrays_unpacked(index: Index):
+    """The pre-fast-path four-plane pytree, consumed by
+    ``seeding.query_index_reference`` (parity oracle / microbenchmark)."""
     return dict(
         bucket_start=index.bucket_start,
         entries_key=index.entries_key,
@@ -127,9 +187,10 @@ INDEX_AXIS = "model"
 
 # The pytree keys of a partitioned index (every leaf has a leading
 # (n_parts,) partition axis, sharded over INDEX_AXIS by
-# distributed/sharding.partitioned_index_shardings).
-PARTITIONED_INDEX_KEYS = ("p_bucket_start", "p_entries_key",
-                          "p_entries_pos", "p_entries_cnt")
+# distributed/sharding.partitioned_index_shardings).  The entry plane is
+# the SAME packed [keycnt | t_pos] layout as the replicated table
+# (entries_packed above), per partition.
+PARTITIONED_INDEX_KEYS = ("p_bucket_start", "p_entries_packed")
 
 
 def partition_index(index: Index, n_parts: int):
@@ -142,7 +203,9 @@ def partition_index(index: Index, n_parts: int):
     the hash-table query against exactly one resident partition per step.
     Entry order inside a partition matches the global index (contiguous
     bucket ranges), so partitioned query results are bit-identical to the
-    replicated table's.
+    replicated table's; each partition carries the packed entry rows
+    unchanged — ``p_entries_packed[p]`` is (2, emax) int32, the same
+    [keycnt; t_pos] row layout as ``entries_packed``.
     """
     nb = index.cfg.n_buckets
     if n_parts & (n_parts - 1):
@@ -154,16 +217,12 @@ def partition_index(index: Index, n_parts: int):
     sizes = [int(starts[(p + 1) * bl] - starts[p * bl])
              for p in range(n_parts)]
     emax = max(max(sizes), 1)
-    keys = np.zeros((n_parts, emax), np.uint32)
-    pos = np.zeros((n_parts, emax), np.int32)
-    cnt = np.zeros((n_parts, emax), np.int32)
+    packed_all = index.entries_packed
+    packed = np.zeros((n_parts, 2, emax), np.int32)
     bstart = np.zeros((n_parts, bl + 1), np.int32)
     for p in range(n_parts):
         lo, hi = int(starts[p * bl]), int(starts[(p + 1) * bl])
         n = hi - lo
-        keys[p, :n] = index.entries_key[lo:hi]
-        pos[p, :n] = index.entries_pos[lo:hi]
-        cnt[p, :n] = index.entries_cnt[lo:hi]
+        packed[p, :, :n] = packed_all[:, lo:hi]
         bstart[p] = starts[p * bl:(p + 1) * bl + 1] - starts[p * bl]
-    return dict(p_bucket_start=bstart, p_entries_key=keys,
-                p_entries_pos=pos, p_entries_cnt=cnt)
+    return dict(p_bucket_start=bstart, p_entries_packed=packed)

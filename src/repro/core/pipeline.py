@@ -37,7 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import chaining, driver, stages
+from repro.core import chaining, driver, seeding, stages, vote
 from repro.core.config import MarsConfig
 from repro.core.index import Index, index_arrays
 
@@ -59,23 +59,79 @@ def map_read(signal: jnp.ndarray, index: Dict[str, jnp.ndarray],
 
 
 # --------------------------------------------------------------------------- #
-# Filter-aware chaining fast path
+# Cheap-phase fast path (batch-level detect / query / vote)
 # --------------------------------------------------------------------------- #
-def cheap_phase(signals: jnp.ndarray, index: Dict[str, jnp.ndarray],
-                cfg: MarsConfig, plan: stages.Plan):
-    """vmap CHEAP_STAGES (detect..vote) over a chunk.
-
-    Returns (q_pos (R,E,H), t_pos (R,E,H), hit_valid (R,E,H),
-    per-read counters dict) — everything the chaining phase and the chunk
-    counter schema need.  ``counters["n_anchors_postvote"]`` is the per-read
-    post-filter anchor count the compaction gate keys on.
-    """
+def cheap_phase_vmap(signals: jnp.ndarray, index: Dict[str, jnp.ndarray],
+                     cfg: MarsConfig, plan: stages.Plan):
+    """The per-read cheap phase: vmap CHEAP_STAGES (detect..vote) over a
+    chunk through the state-dict stage bodies.  Fallback for plans whose
+    cheap stages have no batch-level expression, and the parity comparand
+    for ``cheap_phase`` (tests/test_cheap_fastpath.py)."""
     def one(signal):
         state = stages.execute_stages({"signal": signal, "counters": {}},
                                       index, cfg, plan, stages.CHEAP_STAGES)
         return (state["q_pos"], state["t_pos"], state["hit_valid"],
                 state["counters"])
     return jax.vmap(one)(signals)
+
+
+def cheap_phase(signals: jnp.ndarray, index: Dict[str, jnp.ndarray],
+                cfg: MarsConfig, plan: stages.Plan):
+    """The cheap phase (detect..vote) over a chunk, batch-level where the
+    plan allows (``stages.cheap_primitives``).
+
+    Returns (q_pos (R,E,H), t_pos (R,E,H), hit_valid (R,E,H), per-read
+    counters dict) — everything the chaining phase and the chunk counter
+    schema need.  ``counters["n_anchors_postvote"]`` is the per-read
+    post-filter anchor count the compaction gate keys on.
+
+    Batch level means: detect runs ONCE per chunk (the Pallas event_detect
+    kernel's native grid, no unit-batch vmap), the hash-table query issues
+    two whole-chunk fused gathers against the packed index (one pLUTo sweep
+    each on the Pallas backend), and the vote filter accumulates the whole
+    chunk in one segment-sum.  Quantize/seed (pure per-read arithmetic) and
+    non-gather query backends (ring/a2a) run their registered stage bodies
+    under vmap, so the math stays in ONE place — outputs and counters are
+    bit-identical to ``cheap_phase_vmap``.
+    """
+    prims = stages.cheap_primitives(plan, cfg)
+    if prims is None:
+        return cheap_phase_vmap(signals, index, cfg, plan)
+
+    if prims.detector is not None:
+        means, n_ev = prims.detector(signals)
+    else:
+        def detect_one(signal):
+            st = stages.execute_stages({"signal": signal, "counters": {}},
+                                       index, cfg, plan, ("detect",))
+            return st["events"], st["n_events"]
+        means, n_ev = jax.vmap(detect_one)(signals)
+    counters = {"n_events": n_ev}
+
+    def quant_seed(ev, n):
+        st = stages.execute_stages({"events": ev, "n_events": n,
+                                    "counters": {}},
+                                   index, cfg, plan, ("quantize", "seed"))
+        return st["keys"], st["seed_valid"]
+    keys, seed_valid = jax.vmap(quant_seed)(means, n_ev)
+
+    if prims.query_fn is not None:
+        def query_one(k, v):
+            st = prims.query_fn({"keys": k, "seed_valid": v, "counters": {}},
+                                cfg, index)
+            return st["t_pos"], st["hit_valid"], st["counters"]
+        t_pos, hit_valid, qc = jax.vmap(query_one)(keys, seed_valid)
+    else:
+        t_pos, hit_valid, qc = seeding.query_index(
+            keys, seed_valid, index, cfg, gather=prims.gather)
+    counters.update(qc)
+    q_pos = jnp.broadcast_to(
+        jnp.arange(cfg.max_events, dtype=jnp.int32)[None, :, None],
+        t_pos.shape)
+
+    hit_valid, vc = vote.vote_filter(q_pos, t_pos, hit_valid, cfg)
+    counters.update(vc)
+    return q_pos, t_pos, hit_valid, counters
 
 
 def _chain_widths(cfg: MarsConfig, n_keys: int):
@@ -207,8 +263,12 @@ def _chunk_program(signals: jnp.ndarray, index: Dict[str, jnp.ndarray],
                                f"missing {missing}")
         t_start, score, mapped = _chain_outputs(
             q_pos, t_pos, hit_valid, cnt, cfg, prims)
+    # sum per-read counters over valid rows; per-stage DEBUG counters (e.g.
+    # n_votes_clipped) are dropped so MapOutput.counters is exactly
+    # CHUNK_COUNTER_SCHEMA — unchanged for every schema-keyed consumer
     summed = {k: jnp.where(rv, v, jnp.zeros_like(v)).sum().astype(jnp.int32)
-              for k, v in counters.items()}
+              for k, v in counters.items()
+              if k not in stages.DEBUG_COUNTER_SCHEMA}
     summed["n_reads"] = rv.sum().astype(jnp.int32)
     summed["n_samples"] = (rv.sum() * signals.shape[1]).astype(jnp.int32)
     return MapOutput(

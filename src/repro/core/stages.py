@@ -102,6 +102,14 @@ COUNTER_SCHEMA: Tuple[str, ...] = (
 CHUNK_COUNTER_SCHEMA: Tuple[str, ...] = COUNTER_SCHEMA + (
     "n_reads", "n_samples")
 
+# Per-stage DEBUG counters: diagnostics a stage may emit alongside the
+# uniform schema (e.g. the vote filter's clip-guard tally).  The chunk
+# program DROPS them from MapOutput.counters so CHUNK_COUNTER_SCHEMA —
+# and every consumer keyed on it (workload, ssd_model, psum specs) —
+# stays exactly as-is; read them by running the stage (or cheap_phase)
+# directly.
+DEBUG_COUNTER_SCHEMA: Tuple[str, ...] = ("n_votes_clipped",)
+
 
 @dataclasses.dataclass(frozen=True)
 class Backend:
@@ -114,11 +122,17 @@ class Backend:
 
     ``primitive`` is the stage's underlying array-level kernel, exposed so
     batch-level fast paths can call it outside the per-read state-dict
-    protocol (the chaining fast path in core/pipeline.py runs sort/dp on a
-    compacted read batch at a reduced anchor width):
+    protocol.  The chaining fast path (core/pipeline.py) runs sort/dp on a
+    compacted read batch at a reduced anchor width; the cheap-phase fast
+    path runs detect once per chunk and routes the query gathers through
+    one whole-chunk lookup:
 
-        sort: primitive(keys (L,) int32) -> sorted keys (L,)
-        dp:   primitive(q, t, valid (A,), cfg) -> (f (A,) f32, d (A,) i32)
+        sort:   primitive(keys (L,) int32) -> sorted keys (L,)
+        dp:     primitive(q, t, valid (A,), cfg) -> (f (A,) f32, d (A,) i32)
+        detect: primitive(signals (R,S) f32, cfg) -> (means (R,E) f32,
+                n_events (R,) i32) — batch-level, no unit-batch vmap
+        query:  primitive(table (N,), idx (...,)) -> values (...,) — the
+                entry-plane gather (pLUTo lookup)
 
     ``index_kind`` declares the index layout the backend consumes:
     "replicated" (the plain ``index_arrays`` dict, whole table on every
@@ -261,6 +275,48 @@ def chain_primitives(plan: Plan, cfg: MarsConfig):
     else:
         dp = lambda q, t, v: chaining.chain_dp(q, t, v, cfg)
     return sorter, dp
+
+
+@dataclasses.dataclass(frozen=True)
+class CheapPrimitives:
+    """Resolved batch-level implementations of a plan's cheap phase
+    (core/pipeline.cheap_phase).
+
+    ``detector``: batch detect (signals (R,S)) -> (means, n_events), or None
+    for the reference math (the per-read detect stage body, vmapped).
+    ``gather``: entry-plane gather for a whole-chunk ``seeding.query_index``
+    call, or None for jnp.take.  ``query_fn``: set instead of ``gather``
+    when the query backend is not gather-expressible (the partitioned-index
+    ring/a2a schedules) — the registered stage body, vmapped per read.
+    """
+    detector: Optional[Callable] = None
+    gather: Optional[Callable] = None
+    query_fn: Optional[Callable] = None
+
+
+def cheap_primitives(plan: Plan, cfg: MarsConfig) -> Optional[CheapPrimitives]:
+    """Resolve the batch-level cheap-phase program for ``plan``, or None when
+    the plan's cheap stages cannot be expressed at batch level (a registered
+    non-reference quantize/seed/vote backend, or a non-reference detect
+    backend without a batch primitive) — those plans fall back to the
+    per-read vmap of the stage bodies.
+    """
+    p = dict(plan)
+    for stage in ("quantize", "seed", "vote"):
+        if p[stage] != REFERENCE:
+            return None
+    det = _REGISTRY[("detect", p["detect"])]
+    if det.name != REFERENCE and det.primitive is None:
+        return None
+    det_prim = det.primitive
+    detector = (None if det.name == REFERENCE
+                else (lambda signals: det_prim(signals, cfg)))
+    q = _REGISTRY[("query", p["query"])]
+    if q.name == REFERENCE:
+        return CheapPrimitives(detector=detector)
+    if q.primitive is not None:
+        return CheapPrimitives(detector=detector, gather=q.primitive)
+    return CheapPrimitives(detector=detector, query_fn=q.fn)
 
 
 def missing_counters(counters: Dict[str, Any]) -> Tuple[str, ...]:

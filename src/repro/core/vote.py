@@ -9,6 +9,16 @@ gathers fewer than `thresh_voting` votes are discarded before chaining.
 Votes accumulate in a mod-hash bin table (vote_bins) — the same bounded-
 memory trade the in-storage Arithmetic Units make (they own a fixed register
 file per subarray pair).
+
+Cheap-phase fast path: ``vote_filter`` accepts a whole chunk of reads at
+once — (R, E, H) anchors fuse into ONE segment-sum scatter over per-read
+bin blocks instead of 2R per-read scatters (integer sums, so the fusion is
+bit-identical).  The pre-fast-path per-read implementation survives as
+``vote_filter_reference`` (parity oracle + the "pre" side of the
+microbenchmark).  The projected-start shift is clip-guarded: a diag below
+-2^20 no longer wraps into a wrong bin; clipped votes are tallied in the
+``n_votes_clipped`` debug counter (OUTSIDE stages.CHUNK_COUNTER_SCHEMA —
+the chunk program drops it from the uniform per-chunk counters).
 """
 from __future__ import annotations
 
@@ -19,15 +29,18 @@ import jax.numpy as jnp
 
 from repro.core.config import MarsConfig
 
+# Projected starts are shifted by +2^20 before the window bit-ops so that
+# slightly-negative diags (t_pos - q_pos < 0 near the reference start) stay
+# non-negative.  Anything below -DIAG_SHIFT is clip-guarded (and counted).
+DIAG_SHIFT = 1 << 20
 
-def vote_filter(q_pos: jnp.ndarray, t_pos: jnp.ndarray, valid: jnp.ndarray,
-                cfg: MarsConfig) -> Tuple[jnp.ndarray, Dict]:
-    """q_pos, t_pos: (E,H) int32; valid: (E,H) bool.  Returns (valid', counters).
 
-    Window id = projected start >> voting_window_log2; anchors vote for wid
-    and wid+1 (overlapping windows); an anchor survives if either window it
-    voted for reaches thresh_voting.
-    """
+def vote_filter_reference(q_pos: jnp.ndarray, t_pos: jnp.ndarray,
+                          valid: jnp.ndarray,
+                          cfg: MarsConfig) -> Tuple[jnp.ndarray, Dict]:
+    """Pre-fast-path per-read vote filter: two segment-sum scatters, no clip
+    guard.  q_pos, t_pos: (E,H) int32; valid: (E,H) bool.  Parity oracle +
+    the "pre" side of the cheap-phase microbenchmark."""
     if not cfg.use_vote_filter:
         return valid, dict(n_anchors_postvote=valid.sum(),
                            n_votes_cast=jnp.int32(0))
@@ -35,7 +48,7 @@ def vote_filter(q_pos: jnp.ndarray, t_pos: jnp.ndarray, valid: jnp.ndarray,
     nbins = cfg.vote_bins
     diag = t_pos - q_pos                                    # projected start
     # shift to non-negative before the bit ops (diag can be slightly < 0)
-    diag = diag + (1 << 20)
+    diag = diag + DIAG_SHIFT
     w1 = (diag >> v) % nbins
     w2 = ((diag >> v) + 1) % nbins
     ones = valid.astype(jnp.int32).reshape(-1)
@@ -47,4 +60,59 @@ def vote_filter(q_pos: jnp.ndarray, t_pos: jnp.ndarray, valid: jnp.ndarray,
     keep = valid & (jnp.maximum(v1, v2) >= cfg.thresh_voting)
     counters = dict(n_anchors_postvote=keep.sum(),
                     n_votes_cast=2 * valid.sum())
+    return keep, counters
+
+
+def vote_filter(q_pos: jnp.ndarray, t_pos: jnp.ndarray, valid: jnp.ndarray,
+                cfg: MarsConfig) -> Tuple[jnp.ndarray, Dict]:
+    """q_pos, t_pos: (E,H) or (R,E,H) int32; valid: same-shape bool.
+    Returns (valid', counters) — counters are scalars for per-read input and
+    (R,) vectors for a batched chunk.
+
+    Window id = projected start >> voting_window_log2; anchors vote for wid
+    and wid+1 (overlapping windows); an anchor survives if either window it
+    voted for reaches thresh_voting.
+
+    Batched input fuses the whole chunk into ONE segment-sum over R
+    consecutive nbins-blocks (segment id = read * nbins + window) — integer
+    votes, so per-read results are bit-identical to the per-read oracle.
+    The +DIAG_SHIFT projected-start shift is clipped at zero: a diag below
+    -DIAG_SHIFT lands in bin 0 instead of silently wrapping through the
+    arithmetic shift, and is counted in the ``n_votes_clipped`` debug
+    counter (outside CHUNK_COUNTER_SCHEMA).
+    """
+    batched = q_pos.ndim == 3
+    red = (-2, -1)                       # per-read reduction axes
+    if not cfg.use_vote_filter:
+        return valid, dict(
+            n_anchors_postvote=valid.sum(red),
+            n_votes_cast=jnp.zeros(valid.shape[:-2], jnp.int32),
+            n_votes_clipped=jnp.zeros(valid.shape[:-2], jnp.int32))
+    v = cfg.voting_window_log2
+    nbins = cfg.vote_bins
+    diag = t_pos - q_pos                                    # projected start
+    shifted = diag + DIAG_SHIFT
+    clipped = jnp.maximum(shifted, 0)
+    n_clipped = (valid & (shifted < 0)).sum(red)
+    w1 = (clipped >> v) % nbins
+    w2 = ((clipped >> v) + 1) % nbins
+    R = q_pos.shape[0] if batched else 1
+    base = (jnp.arange(R, dtype=jnp.int32) * nbins).reshape(
+        (R,) + (1,) * (q_pos.ndim - 1)) if batched else 0
+    ones = valid.astype(jnp.int32).reshape(-1)
+    seg = jnp.concatenate([(base + w1).reshape(-1), (base + w2).reshape(-1)])
+    votes = jax.ops.segment_sum(jnp.concatenate([ones, ones]), seg,
+                                num_segments=R * nbins)
+    if batched:
+        votes = votes.reshape(R, nbins)
+        v1 = jnp.take_along_axis(votes, w1.reshape(R, -1), axis=1)
+        v2 = jnp.take_along_axis(votes, w2.reshape(R, -1), axis=1)
+        v1, v2 = v1.reshape(w1.shape), v2.reshape(w2.shape)
+    else:
+        v1 = jnp.take(votes, w1, axis=0)
+        v2 = jnp.take(votes, w2, axis=0)
+    keep = valid & (jnp.maximum(v1, v2) >= cfg.thresh_voting)
+    counters = dict(n_anchors_postvote=keep.sum(red),
+                    n_votes_cast=2 * valid.sum(red),
+                    n_votes_clipped=n_clipped)
     return keep, counters

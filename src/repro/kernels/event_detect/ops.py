@@ -28,13 +28,25 @@ def event_detect(signals: jnp.ndarray, cfg: MarsConfig):
 
 
 def _detect_pallas(state, cfg, index):
-    """Stage backend: fixed-point event detection on the Pallas kernel (the
-    kernel is batch-level; a unit batch dim is added per read and batched
-    away by vmap)."""
+    """Per-read stage backend (state-dict protocol): a unit batch dim is
+    added per read and batched away by vmap.  The batched chunk program does
+    NOT use this — it calls the batch-level ``primitive`` below, so the
+    kernel runs once per chunk at its native grid (the per-read wrapper's
+    unit-batch vmap was the pathological pre-fast-path configuration the
+    cheap-phase microbenchmark still measures as its "pre" side)."""
     detector = lambda s: tuple(x[0] for x in event_detect(s[None], cfg))
     return stages.detect_with(state, cfg, index, detector=detector)
 
 
+def _detect_supports(cfg):
+    """The kernel evaluates the integer boundary test in int32 — reject
+    configs whose static worst case overflows (events.fixed_tstat_bounds),
+    exactly like the reference path's guard."""
+    return (cfg.fixed_point and cfg.early_quantization
+            and ev.fixed_tstat_in_range(cfg))
+
+
 stages.register_backend(
     "detect", stages.PALLAS, _detect_pallas,
-    supports=lambda cfg: cfg.fixed_point and cfg.early_quantization)
+    supports=_detect_supports,
+    primitive=event_detect)

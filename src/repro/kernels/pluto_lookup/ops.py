@@ -4,29 +4,36 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core import stages
-from repro.kernels.pluto_lookup.pluto_lookup import BQ, BT, pluto_lookup
+from repro.kernels.pluto_lookup.pluto_lookup import (BQ, BT, pluto_lookup,
+                                                     pluto_lookup_rows)
 
 
 def _pad_to(x: jnp.ndarray, m: int, value) -> jnp.ndarray:
     r = (-x.shape[-1]) % m
     if r == 0:
         return x
-    return jnp.concatenate([x, jnp.full((r,), value, x.dtype)])
+    pad = jnp.full(x.shape[:-1] + (r,), value, x.dtype)
+    return jnp.concatenate([x, pad], axis=-1)
 
 
 def lookup(table: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
-    """out[i] = table[clip(idx[i], 0, N-1)] — drop-in for jnp.take(mode='clip').
+    """Pallas pLUTo gather (one-hot MXU sweep) — drop-in for the
+    ``seeding`` gather contract:
 
-    table: (N,) int32/uint32/int16, idx: (..., ) int — any shape.
-    Routes through the Pallas pLUTo kernel (one-hot MXU sweep).
+    * table (N,): out[i] = table[clip(idx[i], 0, N-1)], idx any shape;
+    * table (W, N) packed rows: returns (W, *idx.shape) — every word of
+      each queried row from ONE table sweep (``pluto_lookup_rows``).
     """
     orig_dtype = table.dtype
     orig_shape = idx.shape
-    n = table.shape[0]
+    n = table.shape[-1]
     idx_flat = jnp.clip(idx.reshape(-1).astype(jnp.int32), 0, n - 1)
     table32 = table.astype(jnp.int32) if orig_dtype != jnp.int32 else table
     tp = _pad_to(table32, BT, 0)
     ip = _pad_to(idx_flat, BQ, 0)
+    if table.ndim == 2:
+        out = pluto_lookup_rows(tp, ip)[:, : idx_flat.shape[0]]
+        return out.reshape(table.shape[0], *orig_shape).astype(orig_dtype)
     out = pluto_lookup(tp, ip)[: idx_flat.shape[0]]
     return out.reshape(orig_shape).astype(orig_dtype)
 
@@ -36,4 +43,9 @@ def _query_pallas(state, cfg, index):
     return stages.query_with(state, cfg, index, gather=lookup)
 
 
-stages.register_backend("query", stages.PALLAS, _query_pallas)
+# ``primitive`` exposes the raw gather to the batch-level cheap phase
+# (core/pipeline.cheap_phase): one whole-chunk (2, R, E, H) fused gather of
+# the packed entry plane lowers to ONE pLUTo kernel sweep instead of
+# per-read unit batches.
+stages.register_backend("query", stages.PALLAS, _query_pallas,
+                        primitive=lookup)

@@ -1,6 +1,6 @@
-"""Pure-jnp oracle for pluto_lookup."""
+"""Pure-jnp oracle for pluto_lookup (1-D tables and (W, N) packed rows)."""
 import jax.numpy as jnp
 
 
 def lookup_ref(table: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
-    return jnp.take(table, idx, axis=0, mode="clip")
+    return jnp.take(table, idx, axis=table.ndim - 1, mode="clip")

@@ -161,11 +161,10 @@ def _lower_mars_cell(shape_key: str, mesh, mesh_name: str, chips: int,
     # D5-scale scaled index: ~4M entries over 2^18 buckets
     emax = (4_000_000 // n_model) + 64
     bl = cfg.n_buckets // n_model
+    # packed entry rows: [keycnt; t_pos] (core/index.partition_index)
     parts_abs = dict(
         p_bucket_start=SDS((n_model, bl + 1), jnp.int32),
-        p_entries_key=SDS((n_model, emax), jnp.uint32),
-        p_entries_pos=SDS((n_model, emax), jnp.int32),
-        p_entries_cnt=SDS((n_model, emax), jnp.int32),
+        p_entries_packed=SDS((n_model, 2, emax), jnp.int32),
     )
     signals_abs = SDS((reads, cfg.signal_len), jnp.float32)
     fn = D.make_distributed_mapper(cfg, mesh, schedule=schedule)

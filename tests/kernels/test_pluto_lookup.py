@@ -39,3 +39,24 @@ def test_lookup_2d_indices_and_clip():
     exp = ref.lookup_ref(jnp.asarray(table), jnp.asarray(idx))
     assert out.shape == (4, 33)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+@pytest.mark.parametrize("n,q,w", [(16, 5, 2), (100, 37, 2), (700, 513, 2),
+                                   (2048, 64, 3)])
+def test_lookup_packed_rows(n, q, w):
+    """The packed-row sweep returns every word of each queried row — one
+    table sweep, full int32 range, clip semantics, any idx shape."""
+    rng = np.random.default_rng(n + q + w)
+    table = rng.integers(-2**31, 2**31, size=(w, n),
+                         dtype=np.int64).astype(np.int32)
+    idx = rng.integers(-4, n + 4, size=(q,)).astype(np.int32)
+    out = ops.lookup(jnp.asarray(table), jnp.asarray(idx))
+    exp = ref.lookup_ref(jnp.asarray(table), jnp.asarray(idx))
+    assert out.shape == (w, q)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+    # multi-dim idx keeps the row axis leading
+    idx2 = rng.integers(0, n, size=(3, 4, 5)).astype(np.int32)
+    out2 = ops.lookup(jnp.asarray(table), jnp.asarray(idx2))
+    exp2 = ref.lookup_ref(jnp.asarray(table), jnp.asarray(idx2))
+    assert out2.shape == (w, 3, 4, 5)
+    np.testing.assert_array_equal(np.asarray(out2), np.asarray(exp2))
