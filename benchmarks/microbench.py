@@ -20,6 +20,12 @@ split by stage group:
                   (chaining.sort_anchors_reference / chain_dp_reference)
     map_chunk     the full fused chunk program (fast path on)
     map_chunk_pre the full chunk program with chain_compaction disabled
+    serving_fast  continuous-batching multi-stream serving (ServeDriver):
+                  many short streams packed across stream boundaries into
+                  full chunks
+    serving_pre   the single-tenant serving baseline on the SAME streams:
+                  each stream mapped separately through the driver loop,
+                  so every stream pays its own padded partial chunk
 
 ``scripts/bench_pipeline.py`` drives this and appends the results to
 ``BENCH_pipeline.json`` at the repo root so every PR records the perf
@@ -51,6 +57,19 @@ def git_sha() -> str:
                               timeout=10).stdout.strip() or "unknown"
     except Exception:
         return "unknown"
+
+
+def hardware_key() -> Dict[str, object]:
+    """The hardware/software fingerprint stamped into every measured
+    profile and gate record, so numbers measured on different machines are
+    never silently compared (absolute ms are machine-bound; the gate's
+    pre/fast ratios are not)."""
+    import os
+    import platform
+    return dict(machine=platform.machine(), system=platform.system(),
+                cpu_count=os.cpu_count() or 0,
+                python=platform.python_version(), jax=jax.__version__,
+                jax_backend=jax.default_backend())
 
 
 def time_fn(fn, *args, repeats: int = 5) -> float:
@@ -283,7 +302,121 @@ def bench_backend(cfg: MarsConfig, signals, arrays, backend: str,
         gtf, gtp, gratio = _interleaved(cf[g], cp[g], rounds=max(repeats, 3))
         groups.update({f"{g}_fast": gtf, f"{g}_pre": gtp,
                        f"{g}_speedup": gratio})
+
+    # serving pre/post group (continuous batching across streams)
+    groups.update(bench_serving(cfg, signals, arrays, backend,
+                                repeats=repeats))
     return groups
+
+
+# --------------------------------------------------------------------------- #
+# Serving (continuous batching across streams)
+# --------------------------------------------------------------------------- #
+class _PlanMapper:
+    """Minimal Mapper stand-in over pre-built index arrays: exactly the
+    ``cfg`` + ``chunk_fn()`` surface ServeDriver needs (no Index object,
+    no device re-upload per construction)."""
+
+    def __init__(self, arrays, cfg: MarsConfig, plan):
+        self.arrays, self.cfg, self.plan = arrays, cfg, plan
+
+    def chunk_fn(self):
+        return lambda sig, nv: pipeline.map_chunk(
+            jnp.asarray(sig), self.arrays, self.cfg, n_valid=nv,
+            plan=self.plan)
+
+
+def _serving_programs(cfg: MarsConfig, signals, arrays, backend: str,
+                      stream_len: int = 2, chunk: int = 8):
+    """(fast_call, pre_call, mapper, streams): the serving pre/post pair on
+    one fixed multi-stream workload.
+
+    The workload is R reads split into R/stream_len single-tenant streams
+    (short streams — the sequencer-channel shape).  ``pre`` maps each
+    stream separately through the unified driver loop, so every stream
+    pays its own padded partial chunk (the single-tenant driver this PR
+    replaces); ``fast`` serves the identical reads through ServeDriver,
+    which packs ready reads across stream boundaries into full chunks.
+    Outputs are bit-identical (tests/test_server.py); the speedup is the
+    padding the packer eliminates."""
+    from repro.core import driver
+    from repro.core.server import ServeDriver
+
+    arrays, _ = _split_arrays(arrays)
+    plan = stages.resolve_plan(cfg, backend)
+    mapper = _PlanMapper(arrays, cfg, plan)
+    fn = mapper.chunk_fn()
+    n = (signals.shape[0] // stream_len) * stream_len
+    streams = [np.asarray(signals[i:i + stream_len], np.float32)
+               for i in range(0, n, stream_len)]
+
+    def pre_call():
+        return [driver.collect(driver.stream_map(
+            fn, driver.array_chunks(s, chunk))) for s in streams]
+
+    def fast_call():
+        sd = ServeDriver(mapper, chunk=chunk)
+        for si, s in enumerate(streams):
+            sd.submit(f"s{si}", s)
+        sd.drain()
+        return [sd.results(f"s{si}").t_start for si in range(len(streams))]
+
+    return fast_call, pre_call, mapper, streams
+
+
+def bench_serving(cfg: MarsConfig, signals, arrays, backend: str,
+                  repeats: int = 5, offered_load: float = 0.7,
+                  chunk: int = 8) -> Dict[str, float]:
+    """The serving pre/post group: interleaved single-tenant vs
+    continuous-batching timings, plus wall-clock streams/sec and the
+    virtual-time p99 latency at a fixed offered load (Poisson arrivals at
+    ``offered_load`` x chunk capacity)."""
+    from repro.core.server import ServeDriver
+
+    fast_c, pre_c, mapper, streams = _serving_programs(
+        cfg, signals, arrays, backend, chunk=chunk)
+    tf, tp, ratio = _interleaved(fast_c, pre_c, rounds=max(repeats, 3))
+    out = {"serving_fast": tf, "serving_pre": tp, "serving_speedup": ratio,
+           "serving_streams": len(streams), "serving_chunk": chunk}
+
+    # throughput + tail latency at fixed offered load (virtual clock:
+    # 1 unit = one full-length chunk service)
+    rng = np.random.default_rng(0)
+    n = len(streams) * streams[0].shape[0]
+    times = np.cumsum(rng.exponential(1.0 / (offered_load * chunk), n))
+    flat = np.concatenate(streams)
+    trace = [(float(times[k]), f"s{k % len(streams)}", flat[k])
+             for k in range(n)]
+
+    def serve():
+        sd = ServeDriver(mapper, chunk=chunk)
+        return sd, sd.serve_trace(trace)
+
+    serve()                                   # warm-up
+    t0 = time.perf_counter()
+    sd, reports = serve()
+    wall = time.perf_counter() - t0
+    p99 = float(np.max([r.p99_latency for r in reports.values()]))
+    out.update(serving_offered_load=offered_load,
+               serving_wall_s=wall,
+               serving_streams_per_sec=len(streams) / wall,
+               serving_reads_per_sec=n / wall,
+               serving_p99_virtual=p99,
+               serving_pad_rows=sd.n_pad_rows,
+               serving_chunks=sd.n_chunks)
+    return out
+
+
+def bench_serving_ratio(cfg: MarsConfig, signals, arrays,
+                        backend: str = stages.REFERENCE,
+                        rounds: int = 25) -> Dict[str, float]:
+    """The serving twin of ``bench_chain_ratio``: interleaved single-tenant
+    (pre) vs continuous-batching (fast) rounds over the same streams,
+    median paired ratio as the machine-speed-independent gate estimator."""
+    fast_c, pre_c, _, _ = _serving_programs(cfg, signals, arrays, backend)
+    tf, tp, ratio = _interleaved(fast_c, pre_c, rounds)
+    return {"serving_fast_min": tf, "serving_pre_min": tp, "rounds": rounds,
+            "serving_speedup_median": ratio}
 
 
 def bench_chain_ratio(cfg: MarsConfig, signals, arrays,
@@ -322,6 +455,7 @@ def run(n_reads: int = 32, ref_events: int = 20_000, junk_frac: float = 0.5,
     cfg, signals, arrays = make_workload(n_reads, ref_events, junk_frac, seed)
     rec = {
         "git_sha": git_sha(),
+        "machine": hardware_key(),
         "workload": dict(n_reads=n_reads, ref_events=ref_events,
                          junk_frac=junk_frac, repeats=repeats, seed=seed,
                          signal_len=cfg.signal_len,

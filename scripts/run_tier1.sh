@@ -3,12 +3,19 @@
 #
 #   scripts/run_tier1.sh            # fast pass (skips @slow property sweeps)
 #   scripts/run_tier1.sh --all      # everything, including @slow
-#   scripts/run_tier1.sh --bench    # fast pass + chain+cheap phase perf
-#                                   # gates: runs scripts/bench_pipeline.py
+#   scripts/run_tier1.sh --bench    # fast pass + chain/cheap/serving phase
+#                                   # perf gates: runs scripts/bench_pipeline.py
 #                                   # --check (quick profile) and fails on a
-#                                   # >20% regression of either phase vs the
+#                                   # >20% regression of any gated phase vs the
 #                                   # committed BENCH_pipeline.json (skips
-#                                   # cleanly when no baseline exists)
+#                                   # cleanly when no baseline exists;
+#                                   # BENCH_GATE_PCT overrides the tolerance)
+#   scripts/run_tier1.sh --ci       # the CI entry point: non-interactive,
+#                                   # forces JAX_PLATFORMS=cpu, and fails on
+#                                   # uncommitted BENCH_pipeline.json drift
+#                                   # (the committed baseline must match the
+#                                   # tree being tested). Combinable with
+#                                   # --bench / --all.
 #   scripts/run_tier1.sh tests/test_pipeline.py   # extra pytest args pass through
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -24,20 +31,38 @@ fi
 
 MARKER=(-m "not slow")
 BENCH=0
-while [[ "${1:-}" == "--all" || "${1:-}" == "--bench" ]]; do
+CI=0
+while [[ "${1:-}" == "--all" || "${1:-}" == "--bench" || "${1:-}" == "--ci" ]]; do
     case "$1" in
         --all)   MARKER=() ;;
         --bench) BENCH=1 ;;
+        --ci)    CI=1 ;;
     esac
     shift
 done
 
+if [[ "$CI" == 1 ]]; then
+    # one entry point for the workflow and local runs: no TTY interaction,
+    # CPU-only JAX (CI runners have no accelerator; local runs become
+    # reproducible), and the committed bench baseline must match the tree.
+    export JAX_PLATFORMS=cpu
+    export PYTHONUNBUFFERED=1
+    if ! git diff --quiet HEAD -- BENCH_pipeline.json; then
+        echo "ERROR: uncommitted BENCH_pipeline.json drift — commit the" >&2
+        echo "re-measured baseline or restore the committed one:" >&2
+        git --no-pager diff --stat HEAD -- BENCH_pipeline.json >&2
+        exit 1
+    fi
+fi
+
 python -m pytest -x -q "${MARKER[@]}" "$@"
 
-# Distributed parity: the partitioned-index query backends must stay
-# bit-identical to single-device map_chunk on a multi-device CPU mesh.
+# Distributed parity: the partitioned-index query backends AND the serving
+# driver over them must stay bit-identical to single-device map_chunk /
+# map_realtime on a multi-device CPU mesh.
 XLA_FLAGS="--xla_force_host_platform_device_count=4" \
-    python -m pytest -x -q tests/test_distributed_stages.py
+    python -m pytest -x -q tests/test_distributed_stages.py \
+        tests/test_distributed_serve.py
 
 if [[ "$BENCH" == 1 ]]; then
     python scripts/bench_pipeline.py --check

@@ -7,9 +7,11 @@ Public API:
     Mapper / map_chunk    online read mapping (jit)
     map_chunk_sharded     data-parallel mapping over a device mesh
     driver                unified streaming host driver + ProgressLog
+    ServeDriver           continuous-batching multi-stream serving driver
     score_accuracy        P/R/F1 vs. ground truth
 """
 from repro.core import driver, stages
+from repro.core.server import ServeDriver, StreamReport
 from repro.core.config import (DEFAULT, MODE_MS_FIXED, MODE_MS_FLOAT,
                                MODE_RH2, MODES, MarsConfig)
 from repro.core.index import (Index, build_index, index_arrays,
@@ -22,5 +24,5 @@ __all__ = [
     "MarsConfig", "Index", "build_index", "index_arrays",
     "index_arrays_unpacked", "partition_index",
     "MapOutput", "Mapper", "map_chunk", "map_chunk_sharded", "map_read",
-    "driver", "stages", "score_accuracy",
+    "driver", "stages", "score_accuracy", "ServeDriver", "StreamReport",
 ]

@@ -490,6 +490,14 @@ class Mapper:
                                    driver.array_chunks(signals, chunk))
         return driver.collect(stream)
 
+    def serve(self, **kw):
+        """A continuous-batching ``ServeDriver`` over this mapper: many
+        concurrent client streams packed into this pipeline's chunks
+        (core/server.py).  Results are bit-identical to ``map_signals``
+        on each stream's reads for any interleaving."""
+        from repro.core.server import ServeDriver
+        return ServeDriver(self, **kw)
+
 
 def score_accuracy(out: MapOutput, true_pos: np.ndarray,
                    true_strand: np.ndarray, mappable: np.ndarray,

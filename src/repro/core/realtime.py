@@ -42,7 +42,11 @@ class RealtimeResult:
         return float(self.samples_used.mean() / self.samples_used.max())
 
 
-def _stage_cfg(cfg: MarsConfig, length: int) -> MarsConfig:
+def stage_cfg(cfg: MarsConfig, length: int) -> MarsConfig:
+    """The per-prefix-length pipeline specialization shared by
+    ``map_realtime`` and the serving driver's early-termination ladder
+    (core/server.py) — identical config => identical jit programs =>
+    bit-identical early decisions in both paths."""
     return cfg.replace(signal_len=length,
                        max_events=max(32, min(cfg.max_events, length // 5)))
 
@@ -76,7 +80,7 @@ def map_realtime(signals: np.ndarray, index: Index, cfg: MarsConfig,
         idxs = np.nonzero(unresolved)[0]
         if idxs.size == 0:
             break
-        scfg = _stage_cfg(cfg, L)
+        scfg = stage_cfg(cfg, L)
         last = si == len(stages) - 1
         thresh = scfg.min_chain_score if last else min_score
         fn = base.with_cfg(scfg).chunk_fn()

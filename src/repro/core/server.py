@@ -1,0 +1,434 @@
+"""Continuous-batching serving driver: many concurrent read streams, one
+chunk pipeline.
+
+MARS's headline claim is throughput at sequencer line rate: the
+orchestrator overlaps flash loads with compute so the storage system
+serves many concurrent read streams, not one batch job (Sections
+6.3-6.4).  ``ServeDriver`` is the host-side serving analogue over the
+existing stage engine:
+
+  * **Admission** — clients ``submit`` reads tagged with a stream id,
+    priority and (virtual-time) deadline into ONE bounded ready queue.
+    When the queue is full, admission is priority-aware: a new read
+    evicts the worst-ranked queued read only if it outranks it,
+    otherwise it is rejected — bounded memory and graceful degradation
+    under overload instead of unbounded growth.
+  * **Packing** — each scheduling round takes the best-ranked ready
+    reads (priority desc, deadline asc, arrival order) that share a
+    ladder stage and packs them into the fixed-size padded chunks
+    ``map_chunk`` already consumes: ``driver.pad_rows`` + the traced
+    ``n_valid`` mask keep the counters exact, so chunk composition is
+    invisible to per-read results AND to counter totals.
+  * **One loop** — chunks are driven through the unified double-buffered
+    ``driver.stream_map`` loop (the same loop Mapper / realtime / the
+    launcher use), so host packing overlaps device compute exactly as in
+    batch mapping.  The chunk source is a generator over the live ready
+    queue: results routed from chunk i re-enter the queue in time to be
+    packed while chunk i+1 is still on the device.
+  * **Routing** — every chunk remembers which (stream, read) occupies
+    each row; results are trimmed to ``n_valid`` and scattered back to
+    their owning stream in submission order.
+  * **Early termination** — with ``early_term=True`` reads climb the
+    realtime.py prefix ladder (``realtime.stage_cfg``): a read that maps
+    confidently at a short prefix frees its slot immediately (the Read
+    Until path), unresolved reads re-enter the queue at the next prefix
+    length.  Decision thresholds are bit-identical to
+    ``realtime.map_realtime``, so per-read serving results equal the
+    batch realtime results for ANY interleaving.
+
+Bit-parity is structural: each read's program depends only on its own
+signal (chunk-mates only pick between branches that are bit-identical
+per read — compaction gate, width ladder), so ServeDriver output equals
+``Mapper.map_signals`` on the same reads (early_term off) or
+``realtime.map_realtime`` (early_term on), for every admission order,
+including under ``map_chunk_sharded`` and the ``query:ring`` /
+``query:a2a`` partitioned-index backends (tests/test_server.py,
+tests/test_distributed_serve.py).
+
+Time: the driver keeps a *virtual clock* (arbitrary units) used for
+arrival traces, deadlines and per-read latency accounting — every
+dispatched chunk advances it by ``chunk_cost`` scaled by the prefix
+fraction.  Wall-clock throughput is measured separately by the caller
+(benchmarks/microbench.py, launch/serve_rsga.py).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import driver
+
+
+@dataclasses.dataclass
+class _Slot:
+    """One admitted read waiting for (or climbing) the stage ladder."""
+    stream: str
+    idx: int                  # read index within its stream
+    signal: np.ndarray        # full-length (S,) f32
+    t_arrive: float           # virtual admission time
+    priority: int
+    deadline: float
+    seq: int                  # global admission order (fairness tie-break)
+    stage: int = 0            # current prefix-ladder stage
+
+    def rank(self) -> Tuple:
+        """Scheduling rank: smaller is served first."""
+        return (-self.priority, self.deadline, self.seq)
+
+
+@dataclasses.dataclass
+class StreamState:
+    """Per-stream result buffers, filled in submission order."""
+    t_start: List[int] = dataclasses.field(default_factory=list)
+    score: List[float] = dataclasses.field(default_factory=list)
+    mapped: List[bool] = dataclasses.field(default_factory=list)
+    n_events: List[int] = dataclasses.field(default_factory=list)
+    samples_used: List[int] = dataclasses.field(default_factory=list)
+    stage_of: List[int] = dataclasses.field(default_factory=list)
+    latency: List[float] = dataclasses.field(default_factory=list)
+    admitted: List[bool] = dataclasses.field(default_factory=list)
+    n_rejected: int = 0
+    n_done: int = 0
+
+    def _new_read(self) -> int:
+        self.t_start.append(0)
+        self.score.append(0.0)
+        self.mapped.append(False)
+        self.n_events.append(0)
+        self.samples_used.append(0)
+        self.stage_of.append(-1)
+        self.latency.append(math.inf)
+        self.admitted.append(True)
+        return len(self.t_start) - 1
+
+
+@dataclasses.dataclass
+class StreamReport:
+    """Per-stream serving summary (virtual-time latencies)."""
+    n_reads: int
+    n_mapped: int
+    n_rejected: int
+    p50_latency: float
+    p99_latency: float
+    mean_latency: float
+
+
+class ServeDriver:
+    """Continuous-batching serving front-end over one chunk pipeline.
+
+    ``mapper`` is any object exposing ``cfg`` and ``chunk_fn()`` — a
+    ``pipeline.Mapper`` (any registry backend, optionally with a mesh:
+    sharded and partitioned-index plans serve identically) or a
+    lightweight stand-in (benchmarks).  With ``early_term=True`` it must
+    also expose ``with_cfg`` (Mapper does) so the prefix-ladder
+    specializations share the resident index.
+
+    Parameters
+    ----------
+    chunk:        static rows per device chunk (with a mesh: must divide
+                  over its devices, as in Mapper.map_signals).
+    max_queue:    bound on outstanding reads (queued + in flight).
+                  Admission beyond it is priority-aware (evict a
+                  strictly-worse queued read, else reject) — the
+                  backpressure contract.  Ladder re-entry (early_term)
+                  never grows past the bound: an unresolved read moves
+                  from in-flight back to queued.
+    early_term:   run the realtime.py prefix ladder; reads resolving at a
+                  short prefix free their slot early.
+    prefix_stages: ladder of prefix lengths (last must equal
+                  cfg.signal_len). Defaults to realtime's quarters.
+    min_score:    early-decision score threshold (non-final stages).
+    chunk_cost:   virtual-time cost of a full-length chunk dispatch;
+                  stage chunks cost chunk_cost * L / signal_len.
+    drop_expired: drop queued reads whose deadline passed at packing
+                  time (recorded as rejected; off by default so parity
+                  holds for any deadline assignment).
+    """
+
+    def __init__(self, mapper, chunk: int = 64, max_queue: int = 4096,
+                 early_term: bool = False,
+                 prefix_stages: Optional[Sequence[int]] = None,
+                 min_score: float = 8.0, chunk_cost: float = 1.0,
+                 drop_expired: bool = False):
+        self.mapper = mapper
+        self.cfg = mapper.cfg
+        self.chunk = int(chunk)
+        self.max_queue = int(max_queue)
+        self.early_term = bool(early_term)
+        self.min_score = float(min_score)
+        self.chunk_cost = float(chunk_cost)
+        self.drop_expired = bool(drop_expired)
+
+        S = self.cfg.signal_len
+        if early_term:
+            if prefix_stages is None:
+                prefix_stages = tuple(S * k // 4 for k in range(1, 5))
+            self.stages = tuple(int(L) for L in prefix_stages)
+            if self.stages[-1] != S:
+                raise ValueError(f"prefix_stages must end at signal_len="
+                                 f"{S}; got {self.stages}")
+            from repro.core.realtime import stage_cfg
+            self._stage_fns = [mapper.with_cfg(stage_cfg(self.cfg, L)
+                                               ).chunk_fn()
+                               for L in self.stages]
+            self._stage_thresh = [
+                (stage_cfg(self.cfg, L).min_chain_score
+                 if si == len(self.stages) - 1 else self.min_score)
+                for si, L in enumerate(self.stages)]
+        else:
+            self.stages = (S,)
+            self._stage_fns = [mapper.chunk_fn()]
+            self._stage_thresh = [self.cfg.min_chain_score]
+
+        self.clock = 0.0
+        self.counters: Dict[str, int] = {}
+        self.n_chunks = 0
+        self.n_pad_rows = 0
+        self._queue: List[_Slot] = []
+        self._streams: Dict[str, StreamState] = {}
+        self._arrivals: collections.deque = collections.deque()
+        # ci -> (ladder stage, row slots, virtual completion time)
+        self._inflight: Dict[int, Tuple[int, List[_Slot], float]] = {}
+        self._stage_fifo: collections.deque = collections.deque()
+        self._seq = 0
+
+    # ------------------------------------------------------------------ #
+    # Admission (bounded queue, priority-aware backpressure)
+    # ------------------------------------------------------------------ #
+    def stream(self, stream_id: str) -> StreamState:
+        return self._streams.setdefault(stream_id, StreamState())
+
+    def submit(self, stream_id: str, signals: np.ndarray, priority: int = 0,
+               deadline: float = math.inf, t: Optional[float] = None) -> int:
+        """Admit a batch of reads for ``stream_id``.  Returns the number
+        admitted; the rest were rejected (or evicted a worse read whose
+        stream records the rejection).  ``t`` stamps the virtual arrival
+        time (defaults to the current clock; never rewinds it)."""
+        signals = np.asarray(signals, np.float32)
+        if signals.ndim == 1:
+            signals = signals[None]
+        if signals.shape[1] != self.cfg.signal_len:
+            raise ValueError(f"signals must be (n, {self.cfg.signal_len}); "
+                             f"got {signals.shape}")
+        t = self.clock if t is None else float(t)
+        self.clock = max(self.clock, t)
+        st = self.stream(stream_id)
+        admitted = 0
+        for row in signals:
+            idx = st._new_read()
+            slot = _Slot(stream=stream_id, idx=idx, signal=row, t_arrive=t,
+                         priority=int(priority), deadline=float(deadline),
+                         seq=self._seq)
+            self._seq += 1
+            if self._admit(slot):
+                admitted += 1
+        return admitted
+
+    def _outstanding(self) -> int:
+        """Reads holding a slot: queued + in flight.  The max_queue bound
+        applies to this total, so ladder re-entry of an in-flight read
+        (early_term) moves it back to the queue without ever growing past
+        the bound."""
+        return len(self._queue) + sum(len(slots) for _, slots, _t
+                                      in self._inflight.values())
+
+    def _admit(self, slot: _Slot) -> bool:
+        if self._outstanding() < self.max_queue:
+            self._queue.append(slot)
+            return True
+        if self._queue:
+            worst = max(self._queue, key=lambda s: s.rank())
+            if slot.rank() < worst.rank():
+                self._queue.remove(worst)
+                self._reject(worst)
+                self._queue.append(slot)
+                return True
+        self._reject(slot)
+        return False
+
+    def _reject(self, slot: _Slot) -> None:
+        st = self._streams[slot.stream]
+        st.admitted[slot.idx] = False
+        st.n_rejected += 1
+        st.n_done += 1
+
+    # ------------------------------------------------------------------ #
+    # Packing + the ONE double-buffered loop
+    # ------------------------------------------------------------------ #
+    def _admit_due(self) -> None:
+        while self._arrivals and self._arrivals[0][0] <= self.clock:
+            t, stream_id, signals, priority, deadline = \
+                self._arrivals.popleft()
+            self.submit(stream_id, signals, priority=priority,
+                        deadline=deadline, t=t)
+
+    def _next_chunk(self) -> Optional[driver.Chunk]:
+        self._admit_due()
+        if self.drop_expired:
+            expired = [s for s in self._queue if s.deadline < self.clock]
+            for s in expired:
+                self._queue.remove(s)
+                self._reject(s)
+        if not self._queue:
+            return None
+        self._queue.sort(key=_Slot.rank)
+        stage = self._queue[0].stage
+        take, rest = [], []
+        for s in self._queue:
+            (take if (s.stage == stage and len(take) < self.chunk)
+             else rest).append(s)
+        self._queue = rest
+        L = self.stages[stage]
+        part = np.stack([s.signal[:L] for s in take])
+        ci = self.n_chunks
+        self.n_chunks += 1
+        self.n_pad_rows += self.chunk - len(take)
+        self.clock += self.chunk_cost * L / self.stages[-1]
+        # completion time is fixed at dispatch: stream_map's double buffer
+        # routes chunk i only after pulling chunk i+1, so reading the live
+        # clock at routing time would overcharge every chunk but the last
+        self._inflight[ci] = (stage, take, self.clock)
+        self._stage_fifo.append(stage)
+        return ci, len(take), driver.pad_rows(part, self.chunk)
+
+    def _chunk_source(self) -> Iterable[driver.Chunk]:
+        while True:
+            c = self._next_chunk()
+            if c is None:
+                return
+            yield c
+
+    def _map_fn(self, signals, n_valid):
+        # stream_map dispatches each chunk right after pulling it from the
+        # source, so the FIFO of stage ids pushed by _next_chunk is in
+        # dispatch order.
+        return self._stage_fns[self._stage_fifo.popleft()](signals, n_valid)
+
+    def _route(self, ci: int, n_valid: int, out) -> None:
+        stage, slots, done_t = self._inflight.pop(ci)
+        assert n_valid == len(slots), (ci, n_valid, len(slots))
+        for k, v in out.counters.items():
+            self.counters[k] = self.counters.get(k, 0) + int(v)
+        last = stage == len(self.stages) - 1
+        thresh = self._stage_thresh[stage]
+        L = self.stages[stage]
+        t = np.asarray(out.t_start)
+        s = np.asarray(out.score)
+        m = np.asarray(out.mapped)
+        ne = np.asarray(out.n_events)
+        for i, slot in enumerate(slots):
+            st = self._streams[slot.stream]
+            if not self.early_term:
+                # batch semantics: record the full chunk outputs verbatim
+                # (bit-parity with Mapper.map_signals, mapped or not)
+                st.t_start[slot.idx] = int(t[i])
+                st.score[slot.idx] = float(s[i])
+                st.mapped[slot.idx] = bool(m[i])
+                st.n_events[slot.idx] = int(ne[i])
+                st.samples_used[slot.idx] = L
+                st.stage_of[slot.idx] = stage
+                st.latency[slot.idx] = done_t - slot.t_arrive
+                st.n_done += 1
+                continue
+            # realtime.map_realtime decision rule, bit for bit
+            decide = (bool(m[i]) and float(s[i]) >= thresh) if not last \
+                else bool(m[i])
+            if decide:
+                st.t_start[slot.idx] = int(t[i])
+                st.score[slot.idx] = float(s[i])
+                st.mapped[slot.idx] = True
+                st.n_events[slot.idx] = int(ne[i])
+                st.samples_used[slot.idx] = L
+                st.stage_of[slot.idx] = stage
+                st.latency[slot.idx] = done_t - slot.t_arrive
+                st.n_done += 1
+            elif last:
+                # unresolved at full length: zeros, like map_realtime
+                st.samples_used[slot.idx] = L
+                st.stage_of[slot.idx] = -1
+                st.latency[slot.idx] = done_t - slot.t_arrive
+                st.n_done += 1
+            else:
+                slot.stage = stage + 1
+                self._queue.append(slot)   # keeps seq -> no starvation
+
+    # ------------------------------------------------------------------ #
+    # Draining
+    # ------------------------------------------------------------------ #
+    def _pending(self) -> bool:
+        return bool(self._queue or self._inflight or self._arrivals)
+
+    def drain(self) -> None:
+        """Serve until every admitted read (and queued arrival) resolves.
+
+        One ``driver.stream_map`` invocation runs as long as the ready
+        queue can keep the double buffer full; reads advancing the ladder
+        out of an in-flight chunk re-enter in time for the next pull.
+        The loop restarts only when the queue momentarily drains with
+        work still in flight (a wave boundary)."""
+        while self._pending():
+            if not self._queue and not self._inflight and self._arrivals:
+                self.clock = max(self.clock, self._arrivals[0][0])
+                self._admit_due()
+                continue
+            for ci, n_valid, out in driver.stream_map(self._map_fn,
+                                                      self._chunk_source()):
+                self._route(ci, n_valid, out)
+
+    def serve_trace(self, trace: Iterable[Tuple]) -> Dict[str, StreamReport]:
+        """Run an arrival trace to completion.
+
+        ``trace`` rows are ``(t, stream_id, signals[, priority[,
+        deadline]])`` in virtual-time units; rows need not be sorted.
+        Returns the per-stream reports (``report()``)."""
+        rows = []
+        for row in trace:
+            t, stream_id, signals = row[0], row[1], row[2]
+            priority = row[3] if len(row) > 3 else 0
+            deadline = row[4] if len(row) > 4 else math.inf
+            rows.append((float(t), str(stream_id),
+                         np.asarray(signals, np.float32), int(priority),
+                         float(deadline)))
+        rows.sort(key=lambda r: r[0])
+        self._arrivals.extend(rows)
+        self.drain()
+        return self.report()
+
+    # ------------------------------------------------------------------ #
+    # Results
+    # ------------------------------------------------------------------ #
+    def results(self, stream_id: str):
+        """Per-read results for one stream, in submission order, as a
+        ``pipeline.MapOutput`` (plus the serving extras on the stream
+        state).  Rejected reads read as unmapped zeros with
+        ``admitted[i] == False``.  ``counters`` is empty: chunks mix
+        streams, so exact per-stream counter splits do not exist — the
+        serving-wide totals live on ``self.counters``."""
+        from repro.core.pipeline import MapOutput
+        st = self._streams[stream_id]
+        return MapOutput(
+            t_start=np.asarray(st.t_start, np.int64),
+            score=np.asarray(st.score, np.float32),
+            mapped=np.asarray(st.mapped, bool),
+            n_events=np.asarray(st.n_events, np.int32),
+            counters={})
+
+    def stream_ids(self) -> Tuple[str, ...]:
+        return tuple(self._streams)
+
+    def report(self) -> Dict[str, StreamReport]:
+        out = {}
+        for sid, st in self._streams.items():
+            lat = np.asarray([l for l, a in zip(st.latency, st.admitted)
+                              if a and math.isfinite(l)], np.float64)
+            out[sid] = StreamReport(
+                n_reads=len(st.latency), n_mapped=int(sum(st.mapped)),
+                n_rejected=st.n_rejected,
+                p50_latency=float(np.percentile(lat, 50)) if lat.size else math.nan,
+                p99_latency=float(np.percentile(lat, 99)) if lat.size else math.nan,
+                mean_latency=float(lat.mean()) if lat.size else math.nan)
+        return out

@@ -19,7 +19,8 @@ Two calibration domains:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+import math
+from typing import Dict, Optional, Sequence
 
 from repro.core.workload import Workload
 
@@ -304,6 +305,135 @@ def system_latency_energy(system: str, w: Workload,
         return dict(total=total, compute=t_bc + t_mm, io=t_io, energy=e)
 
     raise ValueError(f"unknown system {system!r}")
+
+
+# --------------------------------------------------------------------------- #
+# Multi-SSD array model + serving-latency queueing term
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class SSDArrayConfig:
+    """An array of N identical MARS SSDs behind one host.
+
+    The reference index is bucket-range-partitioned across the drives with
+    the SAME invariants as ``core/index.partition_index``: ``n_ssds`` must
+    be a power of two, every drive owns an equal contiguous bucket range
+    (1/N of the index bytes), and every seed's bucket lives on exactly ONE
+    drive — so reads stripe evenly, each drive runs the full pipeline on
+    its share with its own flash-load/compute overlap (Section 6.3), and
+    per-drive results merge exactly (the host sums counter partials and
+    concatenates per-read outputs, the analytic analogue of the
+    ``query:ring`` / ``query:a2a`` hit-combining).
+
+    ``result_bytes_per_read`` is the per-read record crossing PCIe to the
+    host (t_start + score + flags); ``t_dispatch`` is the host-side
+    orchestration cost per drive per batch (NVMe submission + completion
+    handling).
+    """
+    n_ssds: int = 4
+    ssd: SSDConfig = SSDConfig()
+    result_bytes_per_read: int = 16
+    t_dispatch: float = 20e-6          # s per drive per batch
+
+    def __post_init__(self):
+        if self.n_ssds < 1 or (self.n_ssds & (self.n_ssds - 1)):
+            raise ValueError(f"n_ssds must be a power of two (bucket-range "
+                             f"index partitioning); got {self.n_ssds}")
+
+
+def mars_array_latency(w: Workload,
+                       arr: SSDArrayConfig = SSDArrayConfig()) -> Dict[str, float]:
+    """Batch latency of a Workload spread over the array.
+
+    Each drive maps 1/N of the reads against its resident 1/N index
+    partition (``Workload.scale`` divides both the read-proportional
+    counts and ``bytes_index`` — exactly the bucket-range split), with
+    per-SSD flash/compute overlap.  Drives are symmetric, so the array
+    compute time is one drive's time; the host adds the result-merge
+    transfer over PCIe and the per-drive dispatch overhead.
+    """
+    per = w.scale(1.0 / arr.n_ssds)
+    lat = mars_latency(per, arr.ssd)
+    t_merge = (w.n_reads * arr.result_bytes_per_read) / arr.ssd.pcie_bw
+    t_orch = arr.n_ssds * arr.t_dispatch
+    total = lat["total"] + t_merge + t_orch
+    return dict(total=total, per_ssd=lat["total"], merge=t_merge,
+                orchestration=t_orch, compute=lat["compute"],
+                flash=lat["flash"])
+
+
+def mars_array_energy(w: Workload,
+                      arr: SSDArrayConfig = SSDArrayConfig()) -> float:
+    """Array energy: N drives each running its 1/N share, plus the result
+    merge over PCIe.  Dynamic energy is workload-proportional, so the
+    per-drive dynamic energies sum back to (almost) the single-drive
+    total; static power burns on every drive for the (shorter) array
+    runtime — the energy cost of the latency win."""
+    per = w.scale(1.0 / arr.n_ssds)
+    per_dyn = mars_energy(per, arr.ssd) - SSD_ACTIVE_W * mars_latency(
+        per, arr.ssd)["total"]
+    static = arr.n_ssds * SSD_ACTIVE_W * mars_array_latency(w, arr)["total"]
+    merge = w.n_reads * arr.result_bytes_per_read * ENERGY["pcie_byte"]
+    return arr.n_ssds * per_dyn + static + merge
+
+
+def _erlang_c(c: int, a: float) -> float:
+    """Erlang-C waiting probability for an M/M/c queue with offered load
+    ``a`` = lambda/mu erlangs (requires a < c).  Computed with the stable
+    iterative Erlang-B recursion b = a*b/(k+a*b)."""
+    b = 1.0
+    for k in range(1, c + 1):
+        b = a * b / (k + a * b)
+    rho = a / c
+    return b / (1.0 - rho + rho * b)
+
+
+def serving_latency(w: Workload, offered_load: float,
+                    arr: SSDArrayConfig = SSDArrayConfig(),
+                    percentiles: Sequence[float] = (50.0, 99.0)
+                    ) -> Dict[str, float]:
+    """Serving-latency percentiles for a stream of read requests at
+    ``offered_load`` reads/second against the array — the queueing term
+    that turns Workload *rates* into p50/p99 alongside the batch
+    latencies.
+
+    Model: each SSD is one server of an M/D/c queue (Poisson arrivals;
+    near-deterministic service — the pipeline is static-shape, so service
+    time is the per-read amortized batch latency of ONE drive serving its
+    index partition).  Mean wait uses the classic M/D/c ~= M/M/c / 2
+    correction on the Erlang-C formula; the waiting-tail is approximated
+    exponential, P(W > t) = C(c,a) * exp(-2 (c*mu - lambda) t), which is
+    exact for M/M/c up to the factor-2 deterministic-service correction.
+    Percentile q of sojourn = service + max(0, ln(C/(1-q)) / (2(c*mu-l))).
+
+    Beyond saturation (rho >= 1) the queue has no steady state: the
+    percentiles are inf and ``saturated`` is set — the graceful-overload
+    regime the serving driver's admission control (core/server.py) is
+    built for.
+    """
+    if offered_load <= 0:
+        raise ValueError(f"offered_load must be > 0; got {offered_load}")
+    # per-read deterministic service time on one drive (its 1/N share,
+    # amortized over its reads), incl. the host merge/dispatch share
+    batch = mars_array_latency(w, arr)
+    service = batch["total"] / max(w.n_reads, 1) * arr.n_ssds
+    c = arr.n_ssds
+    mu = 1.0 / service
+    a = offered_load / mu
+    rho = a / c
+    out = dict(service=service, utilization=rho, n_ssds=c,
+               offered_load=offered_load, saturated=rho >= 1.0)
+    if rho >= 1.0:
+        out.update(mean=math.inf, wait_prob=1.0,
+                   **{f"p{g:g}": math.inf for g in percentiles})
+        return out
+    pw = _erlang_c(c, a)
+    decay = 2.0 * (c * mu - offered_load)       # M/D/c tail correction
+    out.update(mean=service + pw / decay, wait_prob=pw)
+    for q in percentiles:
+        p = q / 100.0
+        wait = 0.0 if (1.0 - p) >= pw else math.log(pw / (1.0 - p)) / decay
+        out[f"p{q:g}"] = service + wait
+    return out
 
 
 def dram_size_sensitivity(w: Workload, sizes=(2 << 30, 4 << 30, 8 << 30),

@@ -1,4 +1,9 @@
-"""Serving launcher: batched prefill + decode loop with KV cache.
+"""LLM token-serving launcher: batched prefill + decode loop with KV cache.
+
+This drives the *language-model* side of the repo (repro.models /
+repro.train) — it has nothing to do with raw-signal read mapping.  The
+RSGA serving launcher — continuous-batching multi-stream read mapping
+through ``core/server.ServeDriver`` — is ``repro.launch.serve_rsga``.
 
     PYTHONPATH=src python -m repro.launch.serve --arch mamba2-780m --reduced \
         --batch 4 --prompt-len 64 --gen 32
@@ -21,7 +26,10 @@ from repro.train import steps as steps_lib
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="LLM token-serving launcher (batched prefill + decode "
+                    "with KV cache). For RSGA read-mapping serving, see "
+                    "`python -m repro.launch.serve_rsga --help`.")
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)

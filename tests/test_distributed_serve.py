@@ -1,0 +1,116 @@
+"""Bit-exact serving parity on a multi-device CPU mesh: ServeDriver over
+``map_chunk_sharded`` and over the partitioned-index ``query:ring`` /
+``query:a2a`` backends — per-stream results and counter totals equal the
+single-device ``Mapper.map_signals`` (early_term off) / ``map_realtime``
+(early_term on) for random stream interleavings (subprocess, forced 4 CPU
+devices — run by scripts/run_tier1.sh's distributed pass)."""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+# run_tier1.sh runs this whole file in its dedicated distributed pass
+# (under 4 forced CPU devices) after the fast pass — not twice
+pytestmark = pytest.mark.slow
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+SCRIPT = """
+import numpy as np
+from repro.core import MarsConfig, Mapper, ServeDriver, build_index
+from repro.core.realtime import map_realtime
+from repro.launch.mesh import make_mesh
+from repro.signal import simulate
+
+mesh = make_mesh((2, 2), ("data", "model"))
+cfg = MarsConfig(hash_bits=14).with_mode("ms_fixed")
+ref = simulate.make_reference(50_000, seed=3)
+reads = simulate.sample_reads(ref, 16, signal_len=cfg.signal_len, seed=4,
+                              junk_frac=0.25)
+idx = build_index(ref.events_concat, ref.n_events, cfg)
+CHUNK = 8
+LADDER = (cfg.signal_len // 2, cfg.signal_len)
+
+# single-device oracles
+solo = Mapper(idx, cfg)
+rt = map_realtime(reads.signals, idx, cfg, stages=LADDER, chunk=CHUNK)
+
+def interleave(seed):
+    rng = np.random.default_rng(seed)
+    owner = rng.integers(0, 3, 16)
+    order = rng.permutation(16)
+    return order, {f"s{k}": [int(r) for r in order if owner[r] == k]
+                   for k in range(3)}
+
+def submit_all(sd, order, streams):
+    for r in order:
+        sid = next(s for s, rows in streams.items() if int(r) in rows)
+        sd.submit(sid, reads.signals[int(r)])
+
+for backend in ("reference", "ring", "a2a"):
+    mapper = Mapper(idx, cfg, backend=backend, mesh=mesh)
+    for seed in (0, 1, 2):
+        order, streams = interleave(seed)
+        # ---- early_term off: parity vs single-device map_signals ----
+        sd = ServeDriver(mapper, chunk=CHUNK)
+        submit_all(sd, order, streams)
+        sd.drain()
+        flat = [r for rows in streams.values() for r in rows]
+        want_all = solo.map_signals(reads.signals[np.asarray(flat)],
+                                    chunk=CHUNK)
+        assert sd.counters == {k: int(v)
+                               for k, v in want_all.counters.items()}, \\
+            (backend, seed, sd.counters, want_all.counters)
+        for sid, rows in streams.items():
+            if not rows:
+                continue
+            want = solo.map_signals(reads.signals[np.asarray(rows)],
+                                    chunk=CHUNK)
+            got = sd.results(sid)
+            tag = (backend, seed, sid)
+            np.testing.assert_array_equal(got.t_start,
+                                          np.asarray(want.t_start),
+                                          err_msg=str(tag))
+            np.testing.assert_array_equal(got.score, np.asarray(want.score),
+                                          err_msg=str(tag))
+            np.testing.assert_array_equal(got.mapped,
+                                          np.asarray(want.mapped),
+                                          err_msg=str(tag))
+            np.testing.assert_array_equal(got.n_events,
+                                          np.asarray(want.n_events),
+                                          err_msg=str(tag))
+        # ---- early_term on: parity vs single-device map_realtime ----
+        sd = ServeDriver(mapper, chunk=CHUNK, early_term=True,
+                         prefix_stages=LADDER)
+        submit_all(sd, order, streams)
+        sd.drain()
+        for sid, rows in streams.items():
+            if not rows:
+                continue
+            sel = np.asarray(rows)
+            got = sd.results(sid)
+            st = sd.stream(sid)
+            tag = (backend, seed, sid, "et")
+            np.testing.assert_array_equal(got.t_start, rt.t_start[sel],
+                                          err_msg=str(tag))
+            np.testing.assert_array_equal(got.score, rt.score[sel],
+                                          err_msg=str(tag))
+            np.testing.assert_array_equal(got.mapped, rt.mapped[sel],
+                                          err_msg=str(tag))
+            np.testing.assert_array_equal(np.asarray(st.samples_used),
+                                          rt.samples_used[sel],
+                                          err_msg=str(tag))
+print("ok")
+"""
+
+
+def test_served_streams_match_single_device():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = str(REPO / "src")
+    r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                       text=True, env=env, cwd=REPO, timeout=560)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "ok" in r.stdout

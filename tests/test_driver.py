@@ -97,6 +97,84 @@ def test_progress_log_torn_tail(tmp_path):
     assert rows == [(10, 1.0, True), (21, 2.5, False)]
 
 
+def test_progress_log_crash_resume_any_tear_offset(tmp_path):
+    """Kill mid-append at EVERY byte offset of the torn final line: load
+    must always recover exactly the consistent prefix, truncate the tear,
+    and keep accepting appends (the chunk whose append was cut short is
+    simply remapped)."""
+    p = tmp_path / "p.jsonl"
+    log = driver.ProgressLog(p, compact_every=100)
+    log.append(1, [(10, 1.0, True)])
+    log.append(2, [(20, 2.0, True)])
+    data = p.read_bytes()
+    line1_end = data.index(b"\n") + 1
+    for cut in range(line1_end, len(data)):       # every mid-append kill
+        p.write_bytes(data[:cut])
+        nxt, rows = driver.ProgressLog(p).load()
+        assert nxt == 1, cut
+        assert rows == [(10, 1.0, True)], cut
+        # resume: the torn chunk is remapped and appends cleanly
+        log2 = driver.ProgressLog(p)
+        log2.load()
+        log2.append(2, [(21, 2.5, False)])
+        nxt, rows = driver.ProgressLog(p).load()
+        assert (nxt, rows) == (2, [(10, 1.0, True), (21, 2.5, False)]), cut
+
+
+def test_progress_log_crash_during_compaction(tmp_path):
+    """Compaction is atomic (tmp + rename): a crash that leaves a stale
+    .tmp behind must not corrupt the log or block later compactions."""
+    p = tmp_path / "p.jsonl"
+    log = driver.ProgressLog(p, compact_every=100)
+    for ci in range(4):
+        log.append(ci + 1, [(ci, float(ci), True)])
+    # simulate a crash after writing the tmp but before the rename
+    tmp = p.with_name(p.name + ".tmp")
+    tmp.write_text("{\"partial")
+    nxt, rows = driver.ProgressLog(p).load()
+    assert nxt == 4 and len(rows) == 4            # original log intact
+    log2 = driver.ProgressLog(p, compact_every=2)
+    log2.load()
+    log2.append(5, [(4, 4.0, True)])              # triggers compaction
+    assert not tmp.exists() or tmp.read_text() != "{\"partial"
+    nxt, rows = driver.ProgressLog(p).load()
+    assert nxt == 5 and len(rows) == 5
+
+
+def test_progress_log_resume_continues_mapping(small_index, cfg_fixed,
+                                               small_reads, tmp_path):
+    """End-to-end crash-resume: map, kill after chunk k, reload, continue
+    from start_chunk — the stitched results equal an uninterrupted run."""
+    mapper = Mapper(small_index, cfg_fixed)
+    chunk = 6
+    p = tmp_path / "progress.jsonl"
+
+    log = driver.ProgressLog(p)
+    for ci, n_valid, out in driver.stream_map(
+            mapper.chunk_fn(), driver.array_chunks(small_reads.signals,
+                                                   chunk)):
+        log.append(ci + 1, [(int(out.t_start[i]), float(out.score[i]),
+                             bool(out.mapped[i])) for i in range(n_valid)])
+        if ci == 0:
+            break                                  # "crash" after chunk 0
+    # a fresh process resumes where the log stopped
+    log2 = driver.ProgressLog(p)
+    start_chunk, rows = log2.load()
+    assert start_chunk == 1 and len(rows) == chunk
+    for ci, n_valid, out in driver.stream_map(
+            mapper.chunk_fn(),
+            driver.array_chunks(small_reads.signals, chunk,
+                                start_chunk=start_chunk)):
+        log2.append(ci + 1, [(int(out.t_start[i]), float(out.score[i]),
+                              bool(out.mapped[i])) for i in range(n_valid)])
+    want = mapper.map_signals(small_reads.signals, chunk=chunk)
+    assert len(log2.rows) == small_reads.signals.shape[0]
+    np.testing.assert_array_equal(
+        np.asarray([r[0] for r in log2.rows]), np.asarray(want.t_start))
+    np.testing.assert_array_equal(
+        np.asarray([r[2] for r in log2.rows]), np.asarray(want.mapped))
+
+
 def test_progress_log_clear(tmp_path):
     log = driver.ProgressLog(tmp_path / "p.jsonl")
     log.append(1, [(0, 0.0, False)])

@@ -1,0 +1,249 @@
+"""ServeDriver: continuous-batching serving over the stage engine.
+
+Bit-parity (the serving contract): for ANY admission interleaving, each
+stream's per-read results equal ``Mapper.map_signals`` on that stream's
+reads alone (early_term off) / ``realtime.map_realtime`` (early_term on),
+and summed counters equal the one-batch totals — chunk composition is
+invisible.  Plus routing/fairness under adversarial interleavings and
+the bounded-queue backpressure contract.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import Mapper, ServeDriver, driver
+from repro.core.realtime import map_realtime
+
+CHUNK = 8
+
+
+def _interleave(n_reads, n_streams, seed):
+    """A random adversarial interleaving: submission order + stream
+    ownership both randomized."""
+    rng = np.random.default_rng(seed)
+    owner = rng.integers(0, n_streams, n_reads)
+    order = rng.permutation(n_reads)
+    streams = {f"s{k}": [int(r) for r in order if owner[r] == k]
+               for k in range(n_streams)}
+    return order, streams
+
+
+def _submit_interleaved(sd, signals, order, streams, **kw):
+    pos = {sid: 0 for sid in streams}
+    for r in order:
+        sid = next(s for s, rows in streams.items() if int(r) in rows)
+        sd.submit(sid, signals[int(r)], **kw)
+        pos[sid] += 1
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_stream_routing_parity(small_index, cfg_fixed, small_reads, seed):
+    """>=3 random interleavings: per-stream results == mapping that stream
+    alone; total counters == one concatenated batch job."""
+    mapper = Mapper(small_index, cfg_fixed)
+    order, streams = _interleave(16, 3, seed)
+    sd = ServeDriver(mapper, chunk=CHUNK)
+    _submit_interleaved(sd, small_reads.signals, order, streams)
+    sd.drain()
+
+    for sid, rows in streams.items():
+        if not rows:
+            continue
+        want = mapper.map_signals(small_reads.signals[np.asarray(rows)],
+                                  chunk=CHUNK)
+        got = sd.results(sid)
+        np.testing.assert_array_equal(got.t_start, np.asarray(want.t_start))
+        np.testing.assert_array_equal(got.score, np.asarray(want.score))
+        np.testing.assert_array_equal(got.mapped, np.asarray(want.mapped))
+        np.testing.assert_array_equal(got.n_events,
+                                      np.asarray(want.n_events))
+    flat = [r for rows in streams.values() for r in rows]
+    want_all = mapper.map_signals(small_reads.signals[np.asarray(flat)],
+                                  chunk=CHUNK)
+    assert sd.counters == {k: int(v) for k, v in want_all.counters.items()}
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_early_termination_parity(small_index, cfg_fixed, small_reads, seed):
+    """ET mode equals batch map_realtime bit for bit — decisions, samples
+    consumed and ladder stage — for any interleaving."""
+    mapper = Mapper(small_index, cfg_fixed)
+    rt = map_realtime(small_reads.signals, small_index, cfg_fixed,
+                      chunk=CHUNK)
+    order, streams = _interleave(16, 3, seed)
+    sd = ServeDriver(mapper, chunk=CHUNK, early_term=True)
+    _submit_interleaved(sd, small_reads.signals, order, streams)
+    sd.drain()
+    for sid, rows in streams.items():
+        if not rows:
+            continue
+        sel = np.asarray(rows)
+        got = sd.results(sid)
+        st = sd.stream(sid)
+        np.testing.assert_array_equal(got.t_start, rt.t_start[sel])
+        np.testing.assert_array_equal(got.score, rt.score[sel])
+        np.testing.assert_array_equal(got.mapped, rt.mapped[sel])
+        np.testing.assert_array_equal(np.asarray(st.samples_used),
+                                      rt.samples_used[sel])
+        np.testing.assert_array_equal(np.asarray(st.stage_of),
+                                      rt.stage_of[sel])
+
+
+def test_early_termination_frees_slots(small_index, cfg_fixed, small_reads):
+    """The Read Until win carries over to serving: mappable reads resolve
+    at short prefixes, so the ET driver runs FEWER full-length chunk rows
+    than the non-ET driver."""
+    mapper = Mapper(small_index, cfg_fixed)
+    sd = ServeDriver(mapper, chunk=CHUNK, early_term=True)
+    sd.submit("s0", small_reads.signals)
+    sd.drain()
+    st = sd.stream("s0")
+    early = np.asarray(st.samples_used) < cfg_fixed.signal_len
+    assert early.mean() > 0.5
+    # early-resolved reads never reached the final ladder stage
+    assert max(np.asarray(st.stage_of)[early]) < len(sd.stages) - 1
+
+
+def test_priority_ordering(small_index, cfg_fixed, small_reads):
+    """Higher-priority reads are packed first: with both streams queued
+    before the drain, every high-priority read finishes (virtual clock)
+    before any low-priority read."""
+    mapper = Mapper(small_index, cfg_fixed)
+    sd = ServeDriver(mapper, chunk=4)
+    sd.submit("low", small_reads.signals[:8], priority=0)
+    sd.submit("high", small_reads.signals[8:16], priority=5)
+    sd.drain()
+    lat_low = np.asarray(sd.stream("low").latency)
+    lat_high = np.asarray(sd.stream("high").latency)
+    assert lat_high.max() < lat_low.min()
+    # routing still exact under preemption
+    want = mapper.map_signals(small_reads.signals[8:16], chunk=4)
+    np.testing.assert_array_equal(sd.results("high").t_start,
+                                  np.asarray(want.t_start))
+
+
+def test_deadline_ordering(small_index, cfg_fixed, small_reads):
+    """Equal priority: earlier deadline is served first (EDF)."""
+    mapper = Mapper(small_index, cfg_fixed)
+    sd = ServeDriver(mapper, chunk=4)
+    sd.submit("late", small_reads.signals[:8], deadline=100.0)
+    sd.submit("soon", small_reads.signals[8:16], deadline=1.0)
+    sd.drain()
+    assert (np.asarray(sd.stream("soon").latency).max()
+            < np.asarray(sd.stream("late").latency).min())
+
+
+def test_fifo_fairness_no_starvation(small_index, cfg_fixed, small_reads):
+    """Equal priority + equal deadline degrade to FIFO by admission order:
+    round-robin interleaved streams finish interleaved (neither stream
+    starves), and completion follows admission order chunk by chunk."""
+    mapper = Mapper(small_index, cfg_fixed)
+    sd = ServeDriver(mapper, chunk=4)
+    for i in range(8):
+        sd.submit(f"s{i % 2}", small_reads.signals[i])
+    sd.drain()
+    l0 = np.asarray(sd.stream("s0").latency)
+    l1 = np.asarray(sd.stream("s1").latency)
+    # reads 0..7 packed in admission order into chunks of 4: the first
+    # chunk holds two reads of each stream — so both streams finish their
+    # first two reads at the same clock
+    np.testing.assert_allclose(sorted(l0)[:2], sorted(l1)[:2])
+
+
+def test_backpressure_bounded_queue(small_index, cfg_fixed, small_reads):
+    """Overload: the ready queue is bounded; excess reads are rejected,
+    higher-priority arrivals evict strictly-worse queued reads, and the
+    drained results still route exactly for every admitted read."""
+    mapper = Mapper(small_index, cfg_fixed)
+    sd = ServeDriver(mapper, chunk=4, max_queue=4)
+    admitted = sd.submit("bulk", small_reads.signals[:10], priority=0)
+    assert admitted == 4
+    assert sd.stream("bulk").n_rejected == 6
+    # a higher-priority read evicts a queued priority-0 read
+    assert sd.submit("vip", small_reads.signals[10], priority=3) == 1
+    assert sd.stream("bulk").n_rejected == 7
+    # an equal-priority read does NOT evict (no churn at same rank)
+    assert sd.submit("bulk2", small_reads.signals[11], priority=0) == 0
+    assert sd.stream("bulk2").n_rejected == 1
+    sd.drain()
+    bulk = sd.stream("bulk")
+    adm = np.asarray(bulk.admitted)
+    assert adm.sum() == 3                      # 4 admitted - 1 evicted
+    # rejected reads read as unmapped zeros and never ran
+    res = sd.results("bulk")
+    assert not res.mapped[~adm].any()
+    assert np.isinf(np.asarray(bulk.latency)[~adm]).all()
+    # admitted reads still bit-exact vs solo mapping
+    want = mapper.map_signals(small_reads.signals[:10][adm], chunk=4)
+    np.testing.assert_array_equal(res.t_start[adm], np.asarray(want.t_start))
+    np.testing.assert_array_equal(res.mapped[adm], np.asarray(want.mapped))
+
+
+def test_drop_expired_deadlines(small_index, cfg_fixed, small_reads):
+    mapper = Mapper(small_index, cfg_fixed)
+    sd = ServeDriver(mapper, chunk=4, drop_expired=True)
+    sd.submit("s", small_reads.signals[:4], deadline=math.inf)
+    sd.clock = 10.0
+    sd.submit("x", small_reads.signals[4:8], deadline=5.0)  # already past
+    sd.drain()
+    assert sd.stream("x").n_rejected == 4
+    assert sd.stream("s").n_rejected == 0
+    assert np.asarray(sd.stream("s").samples_used).min() > 0
+
+
+def test_serve_trace_report(small_index, cfg_fixed, small_reads):
+    """Trace-driven serving: arrivals admitted at their virtual times,
+    per-stream p50/p99 reported, makespan covers the last arrival."""
+    mapper = Mapper(small_index, cfg_fixed)
+    sd = ServeDriver(mapper, chunk=4)
+    trace = [(float(k), f"s{k % 2}", small_reads.signals[k])
+             for k in range(8)]
+    reports = sd.serve_trace(trace)
+    assert set(reports) == {"s0", "s1"}
+    for r in reports.values():
+        assert r.n_reads == 4 and r.n_rejected == 0
+        assert r.p99_latency >= r.p50_latency > 0
+    assert sd.clock >= 7.0
+    # late-arriving reads still route exactly
+    want = mapper.map_signals(small_reads.signals[0:8:2], chunk=4)
+    np.testing.assert_array_equal(sd.results("s0").t_start,
+                                  np.asarray(want.t_start))
+
+
+def test_mapper_serve_convenience(small_index, cfg_fixed, small_reads):
+    sd = Mapper(small_index, cfg_fixed).serve(chunk=CHUNK)
+    assert isinstance(sd, ServeDriver)
+    sd.submit("s", small_reads.signals[:4])
+    sd.drain()
+    assert sd.stream("s").n_done == 4
+
+
+def test_submit_shape_guard(small_index, cfg_fixed):
+    sd = ServeDriver(Mapper(small_index, cfg_fixed), chunk=4)
+    with pytest.raises(ValueError, match="signals"):
+        sd.submit("s", np.zeros((2, 3), np.float32))
+
+
+def test_prefix_ladder_guard(small_index, cfg_fixed):
+    with pytest.raises(ValueError, match="signal_len"):
+        ServeDriver(Mapper(small_index, cfg_fixed), early_term=True,
+                    prefix_stages=(256, 512))
+
+
+def test_partial_chunks_match_driver_padding(small_index, cfg_fixed,
+                                             small_reads):
+    """A lone 3-read stream forces a padded partial chunk; results match
+    the unified driver's own padded chunking (pad_rows + n_valid)."""
+    mapper = Mapper(small_index, cfg_fixed)
+    sd = ServeDriver(mapper, chunk=CHUNK)
+    sd.submit("s", small_reads.signals[:3])
+    sd.drain()
+    want = driver.collect(driver.stream_map(
+        mapper.chunk_fn(), driver.array_chunks(small_reads.signals[:3],
+                                               CHUNK)))
+    got = sd.results("s")
+    np.testing.assert_array_equal(got.t_start, want.t_start)
+    np.testing.assert_array_equal(got.mapped, want.mapped)
+    assert sd.counters == want.counters
+    assert sd.n_pad_rows == CHUNK - 3

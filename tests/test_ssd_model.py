@@ -77,3 +77,84 @@ def test_all_systems_run():
     for s in S.SYSTEMS:
         r = S.system_latency_energy(s, w)
         assert r["total"] > 0 and r["energy"] > 0, s
+
+
+# --------------------------------------------------------------------------- #
+# Multi-SSD array + serving queueing term
+# --------------------------------------------------------------------------- #
+def test_array_latency_scales_down():
+    """Bucket-range partitioning: each doubling of the array roughly halves
+    batch latency (compute and index stream split evenly; host merge and
+    dispatch grow only mildly)."""
+    w = _w()
+    t = [S.mars_array_latency(w, S.SSDArrayConfig(n_ssds=n))["total"]
+         for n in (1, 2, 4, 8)]
+    assert t[0] > t[1] > t[2] > t[3]
+    assert t[0] / t[1] > 1.5                    # near-linear at small N
+
+
+def test_array_one_drive_matches_single_ssd():
+    w = _w()
+    arr = S.SSDArrayConfig(n_ssds=1)
+    lat = S.mars_array_latency(w, arr)
+    base = S.mars_latency(w)["total"]
+    assert lat["per_ssd"] == pytest.approx(base)
+    assert lat["total"] == pytest.approx(
+        base + lat["merge"] + lat["orchestration"])
+
+
+def test_array_power_of_two_guard():
+    with pytest.raises(ValueError, match="power of two"):
+        S.SSDArrayConfig(n_ssds=3)
+
+
+def test_array_energy_accounting():
+    """Dynamic energy is workload-proportional (sums back across drives);
+    the array pays extra static power for the extra drives but over a
+    shorter run — total energy stays within a small factor."""
+    w = _w()
+    e1 = S.mars_array_energy(w, S.SSDArrayConfig(n_ssds=1))
+    e4 = S.mars_array_energy(w, S.SSDArrayConfig(n_ssds=4))
+    assert 0.5 < e4 / e1 < 2.0
+
+
+def test_serving_percentiles_ordering():
+    w = _w()
+    arr = S.SSDArrayConfig(n_ssds=4)
+    cap = 4.0 / (S.mars_array_latency(w, arr)["total"] / w.n_reads * 4)
+    sv = S.serving_latency(w, offered_load=0.6 * cap, arr=arr)
+    assert not sv["saturated"]
+    assert sv["p99"] >= sv["p50"] >= sv["service"] > 0
+    assert sv["p99"] >= sv["mean"] - 1e-12 or sv["wait_prob"] < 0.5
+
+
+def test_serving_latency_monotone_in_load():
+    w = _w()
+    arr = S.SSDArrayConfig(n_ssds=4)
+    cap = 4.0 / (S.mars_array_latency(w, arr)["total"] / w.n_reads * 4)
+    p99 = [S.serving_latency(w, offered_load=f * cap, arr=arr)["p99"]
+           for f in (0.3, 0.6, 0.9)]
+    assert p99[0] <= p99[1] <= p99[2]
+    assert p99[2] > p99[0]                       # tail grows toward saturation
+
+
+def test_serving_more_drives_cut_tail_latency():
+    """At matched utilization, a bigger array has a shorter tail (classic
+    M/D/c pooling win)."""
+    w = _w()
+    out = []
+    for n in (2, 8):
+        arr = S.SSDArrayConfig(n_ssds=n)
+        service = S.mars_array_latency(w, arr)["total"] / w.n_reads * n
+        out.append(S.serving_latency(w, offered_load=0.7 * n / service,
+                                     arr=arr)["p99"])
+    assert out[1] < out[0]
+
+
+def test_serving_saturation():
+    w = _w()
+    sv = S.serving_latency(w, offered_load=1e15)
+    assert sv["saturated"]
+    assert sv["p99"] == float("inf") and sv["p50"] == float("inf")
+    with pytest.raises(ValueError, match="offered_load"):
+        S.serving_latency(w, offered_load=0.0)
