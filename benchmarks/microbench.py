@@ -26,6 +26,12 @@ split by stage group:
     serving_pre   the single-tenant serving baseline on the SAME streams:
                   each stream mapped separately through the driver loop,
                   so every stream pays its own padded partial chunk
+    cache         the out-of-core tiered-index group (top-level ``cache``
+                  key, not per-backend): the same reads through the
+                  ``query:tiered`` hot-tile cache (host-resident tiles,
+                  a device cache several times smaller than the index,
+                  prefetching driver loop) vs the fully-resident table,
+                  plus the cache's hit-rate / paged-bytes telemetry
 
 ``scripts/bench_pipeline.py`` drives this and appends the results to
 ``BENCH_pipeline.json`` at the repo root so every PR records the perf
@@ -97,14 +103,16 @@ def make_workload(n_reads: int = 32, ref_events: int = 20_000,
     arrays = {k: jnp.asarray(v) for k, v in index_arrays(idx).items()}
     arrays["_unpacked"] = {k: jnp.asarray(v)
                            for k, v in index_arrays_unpacked(idx).items()}
+    arrays["_index"] = idx                  # host Index (tiered-cache group)
     return cfg, jnp.asarray(reads.signals), arrays
 
 
 def _split_arrays(arrays):
     """(packed online pytree, unpacked oracle pytree) from make_workload's
-    arrays dict — the jit-facing packed dict must not carry the oracle."""
+    arrays dict — the jit-facing packed dict must not carry the oracle or
+    the host-side "_"-prefixed extras."""
     unpacked = arrays.get("_unpacked")
-    packed = {k: v for k, v in arrays.items() if k != "_unpacked"}
+    packed = {k: v for k, v in arrays.items() if not k.startswith("_")}
     if unpacked is None:
         if "entries_key" not in packed:
             raise ValueError(
@@ -271,8 +279,14 @@ def _interleaved(fast_c, pre_c, rounds: int):
 
 
 def bench_backend(cfg: MarsConfig, signals, arrays, backend: str,
-                  repeats: int = 5) -> Dict[str, float]:
-    """Stage-group timings (seconds) for one registry backend."""
+                  repeats: int = 5,
+                  include_serving: bool = True) -> Dict[str, float]:
+    """Stage-group timings (seconds) for one registry backend.
+
+    ``include_serving=False`` skips the serving pre/post group — on the
+    pallas backend it runs the interpret-mode kernels through the whole
+    driver loop many times (~tens of seconds) and the quick profile does
+    not gate on it."""
     cheap_c, fast_c, pre_c = _chain_programs(cfg, signals, arrays, backend)
     packed, _ = _split_arrays(arrays)
     plan = stages.resolve_plan(cfg, backend)
@@ -304,8 +318,11 @@ def bench_backend(cfg: MarsConfig, signals, arrays, backend: str,
                        f"{g}_speedup": gratio})
 
     # serving pre/post group (continuous batching across streams)
-    groups.update(bench_serving(cfg, signals, arrays, backend,
-                                repeats=repeats))
+    if include_serving:
+        groups.update(bench_serving(cfg, signals, arrays, backend,
+                                    repeats=repeats))
+    else:
+        groups["serving_skipped"] = True
     return groups
 
 
@@ -419,6 +436,68 @@ def bench_serving_ratio(cfg: MarsConfig, signals, arrays,
             "serving_speedup_median": ratio}
 
 
+def _cache_programs(cfg: MarsConfig, signals, arrays, n_tiles: int = 16,
+                    cache_slots: int = 4, chunk: int = 8):
+    """(tiered_call, resident_call, tiered_mapper): the SAME read stream
+    mapped through the out-of-core tiered backend (host-resident tiles,
+    ``cache_slots``-slot device cache, prefetching driver loop —
+    core/tiered.py) vs the fully-resident table.  The index spans
+    ``n_tiles`` tiles, several times the cache, so the tiered side really
+    pages; outputs are bit-identical (tests/test_tiered.py), the timing
+    difference is the paging + traffic-pre-pass overhead the hot-tile
+    cache has to keep small."""
+    idx = arrays.get("_index")
+    if idx is None:
+        raise ValueError(
+            "cache microbenchmark needs the host Index: use make_workload "
+            "(which embeds it under '_index')")
+    tiered = pipeline.Mapper(idx, cfg, backend="tiered", tiles=n_tiles,
+                             cache_slots=cache_slots)
+    resident = pipeline.Mapper(idx, cfg)
+    sig = np.asarray(signals, np.float32)
+    return (lambda: tiered.map_signals(sig, chunk=chunk),
+            lambda: resident.map_signals(sig, chunk=chunk), tiered)
+
+
+def bench_cache(cfg: MarsConfig, signals, arrays, repeats: int = 5,
+                n_tiles: int = 16, cache_slots: int = 4,
+                chunk: int = 8) -> Dict[str, float]:
+    """The tiered-index cache group: interleaved tiered-vs-resident
+    timings plus the cache's traffic telemetry (hit rate, host->device
+    paged bytes) on an index several times the cache size."""
+    fast_c, pre_c, mapper = _cache_programs(cfg, signals, arrays, n_tiles,
+                                            cache_slots, chunk)
+    tf, tp, ratio = _interleaved(fast_c, pre_c, rounds=max(repeats, 3))
+    cache = mapper.cache
+    cache.reset_stats()
+    fast_c()                               # one counted steady-state pass
+    return {
+        "cache_tiered": tf, "cache_resident": tp, "cache_speedup": ratio,
+        "cache_hit_rate": cache.hit_rate,
+        "cache_hits": cache.hits, "cache_misses": cache.misses,
+        "cache_paged_bytes": cache.paged_bytes,
+        "cache_n_tiles": n_tiles, "cache_slots": cache.n_slots,
+        "cache_tile_nbytes": cache.tiered.tile_nbytes,
+        "cache_nbytes": cache.cache_nbytes,
+        "cache_index_nbytes": cache.tiered.nbytes,
+    }
+
+
+def bench_cache_ratio(cfg: MarsConfig, signals, arrays,
+                      backend: str = stages.REFERENCE,
+                      rounds: int = 25) -> Dict[str, float]:
+    """The cache twin of ``bench_chain_ratio``: interleaved resident (pre)
+    vs tiered-with-small-cache (fast) rounds over the same reads, median
+    paired ratio as the machine-speed-independent gate estimator.  The
+    ratio is below 1 (out-of-core paging costs something); the gate
+    catches it getting WORSE."""
+    del backend                            # tiered vs resident is the pair
+    fast_c, pre_c, _ = _cache_programs(cfg, signals, arrays)
+    tf, tp, ratio = _interleaved(fast_c, pre_c, rounds)
+    return {"cache_fast_min": tf, "cache_pre_min": tp, "rounds": rounds,
+            "cache_speedup_median": ratio}
+
+
 def bench_chain_ratio(cfg: MarsConfig, signals, arrays,
                       backend: str = stages.REFERENCE,
                       rounds: int = 25) -> Dict[str, float]:
@@ -451,7 +530,7 @@ def bench_cheap_ratio(cfg: MarsConfig, signals, arrays,
 
 def run(n_reads: int = 32, ref_events: int = 20_000, junk_frac: float = 0.5,
         repeats: int = 5, backends=(stages.REFERENCE, stages.PALLAS),
-        seed: int = 0) -> Dict:
+        seed: int = 0, pallas_serving: bool = True) -> Dict:
     cfg, signals, arrays = make_workload(n_reads, ref_events, junk_frac, seed)
     rec = {
         "git_sha": git_sha(),
@@ -466,6 +545,9 @@ def run(n_reads: int = 32, ref_events: int = 20_000, junk_frac: float = 0.5,
         "backends": {},
     }
     for b in backends:
+        inc = pallas_serving or b != stages.PALLAS
         rec["backends"][b] = bench_backend(cfg, signals, arrays, b,
-                                           repeats=repeats)
+                                           repeats=repeats,
+                                           include_serving=inc)
+    rec["cache"] = bench_cache(cfg, signals, arrays, repeats=repeats)
     return rec

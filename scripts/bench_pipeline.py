@@ -4,12 +4,15 @@ to BENCH_pipeline.json at the repo root (the per-PR perf trajectory file).
 
     scripts/bench_pipeline.py             # measure quick + full profiles
     scripts/bench_pipeline.py --quick     # measure the quick profile only
+                                          # (also skips the pallas serving
+                                          # group — interpret-mode kernels
+                                          # through the driver loop, ~22s)
     scripts/bench_pipeline.py --check     # quick measurement, compared to
                                           # the committed baseline: exits 1
-                                          # if the chaining, cheap OR
-                                          # serving phase time regressed
-                                          # > 20% (skips cleanly when no
-                                          # baseline exists)
+                                          # if the chaining, cheap, serving
+                                          # OR tiered-cache phase time
+                                          # regressed > 20% (skips cleanly
+                                          # when no baseline exists)
 
 Profiles are compared like-for-like (quick vs quick), so --check is immune
 to the workload-size difference between profiles.  The gate compares
@@ -40,7 +43,7 @@ PROFILES = {
     "full": dict(n_reads=32, ref_events=20_000, junk_frac=0.5, repeats=7),
 }
 
-GATE_PHASES = ("chain", "cheap", "serving")
+GATE_PHASES = ("chain", "cheap", "serving", "cache")
 CHECK_BACKEND = "reference"     # backend whose gate ratios are gated
 CHECK_REPEATS = 25
 
@@ -78,6 +81,15 @@ def measure(profiles, **kw):
               f"speedup={ref['serving_speedup']:.2f}x "
               f"({ref['serving_streams_per_sec']:.1f} streams/s, "
               f"p99={ref['serving_p99_virtual']:.2f} virtual)", flush=True)
+        cache = out[name]["cache"]
+        print(f"[bench_pipeline] {name}: cache_resident="
+              f"{cache['cache_resident']*1e3:.2f}ms "
+              f"cache_tiered={cache['cache_tiered']*1e3:.2f}ms "
+              f"ratio={cache['cache_speedup']:.2f}x "
+              f"(hit_rate={cache['cache_hit_rate']:.2f}, "
+              f"paged={cache['cache_paged_bytes']/2**20:.1f} MiB, "
+              f"{cache['cache_slots']}/{cache['cache_n_tiles']} tiles "
+              "resident)", flush=True)
     return out
 
 
@@ -100,9 +112,9 @@ def write(path: pathlib.Path, measured) -> None:
 
 def measure_gate():
     """The interleaved pre/fast ratios on the quick workload — one record
-    per gated phase (chain, cheap, serving), all machine-speed independent
-    (see microbench.bench_chain_ratio / bench_cheap_ratio /
-    bench_serving_ratio)."""
+    per gated phase (chain, cheap, serving, cache), all machine-speed
+    independent (see microbench.bench_chain_ratio / bench_cheap_ratio /
+    bench_serving_ratio / bench_cache_ratio)."""
     from benchmarks import microbench
     params = PROFILES["quick"]
     print(f"[bench_pipeline] measuring interleaved {'/'.join(GATE_PHASES)} "
@@ -111,7 +123,8 @@ def measure_gate():
         params["n_reads"], params["ref_events"], params["junk_frac"])
     fns = dict(chain=microbench.bench_chain_ratio,
                cheap=microbench.bench_cheap_ratio,
-               serving=microbench.bench_serving_ratio)
+               serving=microbench.bench_serving_ratio,
+               cache=microbench.bench_cache_ratio)
     gates = {}
     for phase in GATE_PHASES:
         rec = fns[phase](cfg, signals, arrays, CHECK_BACKEND,
@@ -123,8 +136,8 @@ def measure_gate():
 
 
 def check(path: pathlib.Path) -> int:
-    """Regression gate on the chaining, cheap AND serving phases,
-    machine-speed independent: compares the median interleaved pre/fast
+    """Regression gate on the chaining, cheap, serving AND tiered-cache
+    phases, machine-speed independent: compares the median interleaved pre/fast
     speedup ratio of each phase against the baseline's identically-measured
     ``<phase>_gate`` record.  A rise in any phase's normalized time beyond
     ``gate_tol()`` (default 20%; BENCH_GATE_PCT overrides) fails; a phase
@@ -183,7 +196,7 @@ def main(argv=None) -> int:
     if args.check:
         return check(args.out)
     profiles = ("quick",) if args.quick else ("quick", "full")
-    measured = measure(profiles)
+    measured = measure(profiles, pallas_serving=not args.quick)
     # every write refreshes the gate baselines with the same interleaved
     # estimators --check uses, so the comparison is like-for-like
     for phase, rec in measure_gate().items():

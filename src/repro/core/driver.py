@@ -52,7 +52,9 @@ def array_chunks(signals: np.ndarray, chunk: int,
 
 
 def stream_map(map_fn: Callable[[np.ndarray, int], "MapOutput"],
-               chunks: Iterable[Chunk]) -> Iterator[Tuple[int, int, "MapOutput"]]:
+               chunks: Iterable[Chunk],
+               prefetch: Callable[[np.ndarray, int], None] = None,
+               ) -> Iterator[Tuple[int, int, "MapOutput"]]:
     """Double-buffered device loop.
 
     ``map_fn(signals, n_valid)`` must be an async-dispatching jit program
@@ -61,13 +63,35 @@ def stream_map(map_fn: Callable[[np.ndarray, int], "MapOutput"],
     overlaps host-side reading/padding/serialization.  Yields
     (chunk_idx, n_valid, MapOutput) with per-read fields on the host,
     trimmed to ``n_valid`` rows.
+
+    With ``prefetch`` the loop additionally reads ONE chunk ahead: right
+    after chunk i is dispatched, ``prefetch(signals, n_valid)`` runs on
+    chunk i+1 so host->device staging (the tiered-index hot-tile cache,
+    core/tiered.py) overlaps chunk i's compute.  Without it the pull order
+    is unchanged — live chunk sources (the serving driver's ready queue)
+    depend on the exact pull timing.
     """
     pending = None
-    for ci, n_valid, sig in chunks:
-        out = map_fn(sig, n_valid)          # async dispatch
-        if pending is not None:
-            yield _to_host(*pending)
-        pending = (ci, n_valid, out)
+    if prefetch is None:
+        for ci, n_valid, sig in chunks:
+            out = map_fn(sig, n_valid)      # async dispatch
+            if pending is not None:
+                yield _to_host(*pending)
+            pending = (ci, n_valid, out)
+    else:
+        it = iter(chunks)
+        nxt = next(it, None)
+        if nxt is not None:
+            prefetch(nxt[2], nxt[1])
+        while nxt is not None:
+            ci, n_valid, sig = nxt
+            out = map_fn(sig, n_valid)      # async dispatch
+            nxt = next(it, None)
+            if nxt is not None:
+                prefetch(nxt[2], nxt[1])    # stage next chunk's tiles
+            if pending is not None:
+                yield _to_host(*pending)
+            pending = (ci, n_valid, out)
     if pending is not None:
         yield _to_host(*pending)
 

@@ -291,7 +291,7 @@ def map_chunk(signals: jnp.ndarray, index: Dict[str, jnp.ndarray],
     if plan is None:
         plan = stages.resolve_plan(
             cfg, stages.PALLAS if use_kernels else stages.REFERENCE)
-    if stages.plan_index_kind(plan) != "replicated":
+    if stages.plan_index_kind(plan) == "partitioned":
         raise ValueError(
             f"plan {plan} uses a partitioned-index query backend; run it "
             "through map_chunk_sharded with a mesh (partitions live on the "
@@ -407,18 +407,39 @@ class Mapper:
     whose query backend is partitioned build the ``partition_index``
     arrays (one bucket-range partition per 'model' rank) instead of the
     replicated table, and REQUIRE a mesh with a 'model' axis.
+
+    backend="tiered" keeps the index OUT OF CORE: the packed planes are
+    split into ``tiles`` host-resident bucket-range tiles and only the
+    tiles each chunk's seed traffic touches are paged into a
+    ``cache_slots``-slot device cache (core/tiered.py), prefetching the
+    next chunk's tiles while the current chunk computes.  Results are
+    bit-identical to the resident table for every cache size and eviction
+    order; the cache object (``self.cache``) carries hit/miss/paged-bytes
+    telemetry.  ``index`` may also be a pre-built ``TieredIndex`` (e.g.
+    from the streaming ``build_index_streaming``), in which case ``tiles``
+    is ignored.
     """
 
     def __init__(self, index: Index, cfg: Optional[MarsConfig] = None,
                  use_kernels: bool = False, backend: Optional[str] = None,
-                 mesh=None):
+                 mesh=None, tiles: int = 8, cache_slots: int = 4,
+                 cache_policy: str = "lru", cache_seed: int = 0):
         self.index = index
         self.cfg = cfg or index.cfg
         self.backend = backend or (
             stages.PALLAS if use_kernels else stages.REFERENCE)
         self.plan = stages.resolve_plan(self.cfg, self.backend)
         self.mesh = mesh
-        if stages.plan_index_kind(self.plan) == "partitioned":
+        self.cache = None
+        if stages.plan_index_kind(self.plan) == "tiered":
+            from repro.core.index import TieredIndex, tier_index
+            from repro.core.tiered import HotTileCache
+            ti = (index if isinstance(index, TieredIndex)
+                  else tier_index(index, tiles))
+            self.cache = HotTileCache(ti, cache_slots, mesh=mesh,
+                                      policy=cache_policy, seed=cache_seed)
+            self.arrays = None
+        elif stages.plan_index_kind(self.plan) == "partitioned":
             from repro.core.index import INDEX_AXIS, partition_index
             from repro.distributed.sharding import partitioned_index_shardings
             if mesh is None or INDEX_AXIS not in mesh.axis_names:
@@ -478,6 +499,20 @@ class Mapper:
         """The (signals, n_valid) -> MapOutput program for driver.stream_map
         consumers that bring their own chunk source (e.g. the launcher's
         SignalReader)."""
+        if self.cache is not None:
+            cache, cfg, plan = self.cache, self.cfg, self.plan
+            if self.mesh is not None:
+                def fn(sig, nv):
+                    view = cache.prepare(sig, cfg, plan)
+                    return map_chunk_sharded(jnp.asarray(sig), view, cfg,
+                                             self.mesh, n_valid=nv, plan=plan)
+                return fn
+
+            def fn(sig, nv):
+                view = cache.prepare(sig, cfg, plan)
+                return map_chunk(jnp.asarray(sig), view, cfg, n_valid=nv,
+                                 plan=plan)
+            return fn
         if self.mesh is not None:
             return lambda sig, nv: map_chunk_sharded(
                 jnp.asarray(sig), self.arrays, self.cfg, self.mesh,
@@ -486,8 +521,15 @@ class Mapper:
                                          self.cfg, n_valid=nv, plan=self.plan)
 
     def map_signals(self, signals: np.ndarray, chunk: int = 64) -> MapOutput:
+        prefetch = None
+        if self.cache is not None:
+            cache, cfg, plan = self.cache, self.cfg, self.plan
+            # page the NEXT chunk's tiles while this chunk computes — the
+            # software analogue of MARS's flash-load/compute overlap
+            prefetch = lambda sig, nv: cache.prefetch(sig, cfg, plan)
         stream = driver.stream_map(self.chunk_fn(),
-                                   driver.array_chunks(signals, chunk))
+                                   driver.array_chunks(signals, chunk),
+                                   prefetch=prefetch)
         return driver.collect(stream)
 
     def serve(self, **kw):

@@ -387,40 +387,37 @@ def _erlang_c(c: int, a: float) -> float:
     return b / (1.0 - rho + rho * b)
 
 
-def serving_latency(w: Workload, offered_load: float,
-                    arr: SSDArrayConfig = SSDArrayConfig(),
-                    percentiles: Sequence[float] = (50.0, 99.0)
-                    ) -> Dict[str, float]:
-    """Serving-latency percentiles for a stream of read requests at
-    ``offered_load`` reads/second against the array — the queueing term
-    that turns Workload *rates* into p50/p99 alongside the batch
-    latencies.
+def queueing_percentiles(service: float, c: int, offered_load: float,
+                         percentiles: Sequence[float] = (50.0, 99.0)
+                         ) -> Dict[str, float]:
+    """The shared M/D/c sojourn-percentile core (Poisson arrivals, ``c``
+    servers of deterministic ``service`` each, ``offered_load`` requests
+    per unit time).
 
-    Model: each SSD is one server of an M/D/c queue (Poisson arrivals;
-    near-deterministic service — the pipeline is static-shape, so service
-    time is the per-read amortized batch latency of ONE drive serving its
-    index partition).  Mean wait uses the classic M/D/c ~= M/M/c / 2
-    correction on the Erlang-C formula; the waiting-tail is approximated
-    exponential, P(W > t) = C(c,a) * exp(-2 (c*mu - lambda) t), which is
-    exact for M/M/c up to the factor-2 deterministic-service correction.
+    Mean wait uses the classic M/D/c ~= M/M/c / 2 correction on the
+    Erlang-C formula; the waiting-tail is approximated exponential,
+    P(W > t) = C(c,a) * exp(-2 (c*mu - lambda) t), which is exact for
+    M/M/c up to the factor-2 deterministic-service correction.
     Percentile q of sojourn = service + max(0, ln(C/(1-q)) / (2(c*mu-l))).
 
     Beyond saturation (rho >= 1) the queue has no steady state: the
     percentiles are inf and ``saturated`` is set — the graceful-overload
     regime the serving driver's admission control (core/server.py) is
     built for.
+
+    Both serving models are thin wrappers: ``serving_latency`` feeds the
+    per-drive amortized batch service of the SSD array
+    (c = drives); ``serving_latency_virtual`` feeds the serving driver's
+    virtual-clock chunk service (c = chunk rows — a batch server of B
+    requests per ``chunk_cost`` behaves like B parallel unit-cost
+    servers at the same total capacity).
     """
     if offered_load <= 0:
         raise ValueError(f"offered_load must be > 0; got {offered_load}")
-    # per-read deterministic service time on one drive (its 1/N share,
-    # amortized over its reads), incl. the host merge/dispatch share
-    batch = mars_array_latency(w, arr)
-    service = batch["total"] / max(w.n_reads, 1) * arr.n_ssds
-    c = arr.n_ssds
     mu = 1.0 / service
     a = offered_load / mu
     rho = a / c
-    out = dict(service=service, utilization=rho, n_ssds=c,
+    out = dict(service=service, utilization=rho, n_servers=c,
                offered_load=offered_load, saturated=rho >= 1.0)
     if rho >= 1.0:
         out.update(mean=math.inf, wait_prob=1.0,
@@ -433,6 +430,77 @@ def serving_latency(w: Workload, offered_load: float,
         p = q / 100.0
         wait = 0.0 if (1.0 - p) >= pw else math.log(pw / (1.0 - p)) / decay
         out[f"p{q:g}"] = service + wait
+    return out
+
+
+def serving_latency(w: Workload, offered_load: float,
+                    arr: SSDArrayConfig = SSDArrayConfig(),
+                    percentiles: Sequence[float] = (50.0, 99.0)
+                    ) -> Dict[str, float]:
+    """Serving-latency percentiles for a stream of read requests at
+    ``offered_load`` reads/second against the array — the queueing term
+    that turns Workload *rates* into p50/p99 alongside the batch
+    latencies.
+
+    Each SSD is one server of the M/D/c queue (``queueing_percentiles``);
+    service time is the per-read amortized batch latency of ONE drive
+    serving its index partition, incl. the host merge/dispatch share.
+    """
+    # per-read deterministic service time on one drive (its 1/N share,
+    # amortized over its reads)
+    batch = mars_array_latency(w, arr)
+    service = batch["total"] / max(w.n_reads, 1) * arr.n_ssds
+    out = queueing_percentiles(service, arr.n_ssds, offered_load,
+                               percentiles)
+    out["n_ssds"] = out["n_servers"]
+    return out
+
+
+def serving_latency_virtual(chunk: int, offered_load: float,
+                            chunk_cost: float = 1.0,
+                            percentiles: Sequence[float] = (50.0, 99.0)
+                            ) -> Dict[str, float]:
+    """The virtual-clock twin of ``serving_latency``: modeled sojourn
+    percentiles for ``core/server.ServeDriver`` at ``offered_load`` reads
+    per virtual time unit.
+
+    The serving driver is a *batch* server in virtual time — every
+    dispatched chunk advances the clock by ``chunk_cost`` and completes up
+    to ``chunk`` reads at once.  Two terms the plain M/D/c core misses
+    (both calibrated against measured ``ServeDriver.serve_trace``
+    latencies in ``benchmarks/calibrate_serving.py``):
+
+      * the chunk a read rides always costs the FULL ``chunk_cost``
+        regardless of occupancy (sojourn >= chunk_cost even when idle),
+        which c = ``chunk`` parallel unit-cost servers reproduce; and
+      * a read arriving while a chunk is in flight waits the *residual*
+        of that dispatch before its own chunk starts.  The dispatcher is
+        greedy (any queued read triggers a chunk), so its busy fraction B
+        follows the gated-cycle renewal e^(l t)/(e^(l t) + 1/(l t))
+        services per idle gap; the residual seen by a busy-period arrival
+        is Uniform(0, chunk_cost), so percentile p of the boundary wait is
+        chunk_cost * max(0, p - (1-B)) / B.
+
+    Sojourn percentile = chunk_cost + boundary wait + M/D/c backlog wait
+    (the Erlang term only bites once the backlog exceeds a whole chunk).
+    tests/test_ssd_model.py asserts the modeled p50 tracks the measured
+    trace percentile below saturation.
+    """
+    out = queueing_percentiles(chunk_cost, int(chunk), offered_load,
+                               percentiles)
+    out.update(chunk=int(chunk), chunk_cost=chunk_cost)
+    if out["saturated"]:
+        return out
+    # dispatch-boundary residual: busy fraction of the greedy dispatcher
+    lt = offered_load * chunk_cost
+    e_busy = math.exp(lt)                     # services per busy period
+    busy = (e_busy * chunk_cost) / (e_busy * chunk_cost + 1.0 /
+                                    offered_load)
+    out["dispatch_busy"] = busy
+    out["mean"] += busy * chunk_cost / 2.0
+    for q in percentiles:
+        p = q / 100.0
+        out[f"p{q:g}"] += chunk_cost * max(0.0, p - (1.0 - busy)) / busy
     return out
 
 

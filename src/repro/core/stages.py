@@ -88,6 +88,9 @@ _BACKEND_MODULES: Dict[str, Tuple[str, ...]] = {
     ),
     "ring": ("repro.core.distributed",),
     "a2a": ("repro.core.distributed",),
+    # out-of-core query over host-resident bucket-range tiles + the
+    # traffic-keyed hot-tile device cache (core/tiered.py)
+    "tiered": ("repro.core.tiered",),
 }
 _loaded_backend_modules = set()
 
@@ -108,7 +111,13 @@ CHUNK_COUNTER_SCHEMA: Tuple[str, ...] = COUNTER_SCHEMA + (
 # and every consumer keyed on it (workload, ssd_model, psum specs) —
 # stays exactly as-is; read them by running the stage (or cheap_phase)
 # directly.
-DEBUG_COUNTER_SCHEMA: Tuple[str, ...] = ("n_votes_clipped",)
+DEBUG_COUNTER_SCHEMA: Tuple[str, ...] = (
+    "n_votes_clipped",
+    # tiered-index hot-tile cache traffic (core/tiered.py): per-chunk tile
+    # hits / misses / host->device paged bytes (int32, clamped; exact
+    # host-side totals live on HotTileCache)
+    "n_tile_hits", "n_tile_misses", "n_tile_paged_bytes",
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,10 +145,12 @@ class Backend:
 
     ``index_kind`` declares the index layout the backend consumes:
     "replicated" (the plain ``index_arrays`` dict, whole table on every
-    device) or "partitioned" (the ``partition_index`` dict with a leading
+    device), "partitioned" (the ``partition_index`` dict with a leading
     partition axis, range-partitioned by bucket over the mesh 'model'
-    axis).  ``plan_index_kind`` lets the chunk drivers pick matching
-    shard_map in_specs.
+    axis), or "tiered" (the out-of-core hot-tile cache view from
+    ``core/tiered.HotTileCache.prepare`` — host-resident bucket-range
+    tiles paged into fixed device slots).  ``plan_index_kind`` lets the
+    chunk drivers pick matching shard_map in_specs.
     """
     stage: str
     name: str
@@ -157,7 +168,7 @@ def register_backend(stage: str, name: str, fn,
                      primitive=None, index_kind: str = "replicated") -> None:
     if stage not in STAGE_ORDER:
         raise ValueError(f"unknown stage {stage!r}; stages: {STAGE_ORDER}")
-    if index_kind not in ("replicated", "partitioned"):
+    if index_kind not in ("replicated", "partitioned", "tiered"):
         raise ValueError(f"unknown index_kind {index_kind!r}")
     key = (stage, name)
     if key in _REGISTRY and not replace:

@@ -152,7 +152,7 @@ def lower_cell(arch: str, shape_key: str, multi_pod: bool,
 def _lower_mars_cell(shape_key: str, mesh, mesh_name: str, chips: int,
                      schedule: str = "a2a"):
     """Dry-run the distributed MARS mapper at production scale."""
-    from repro.core import distributed as D
+    from repro.core import pipeline, stages
     from repro.core.config import MarsConfig
 
     cfg = MarsConfig(hash_bits=18).with_mode("ms_fixed")
@@ -167,8 +167,11 @@ def _lower_mars_cell(shape_key: str, mesh, mesh_name: str, chips: int,
         p_entries_packed=SDS((n_model, 2, emax), jnp.int32),
     )
     signals_abs = SDS((reads, cfg.signal_len), jnp.float32)
-    fn = D.make_distributed_mapper(cfg, mesh, schedule=schedule)
-    lowered = fn.lower(signals_abs, parts_abs)
+    # the stage-engine path (resolve_plan + the sharded chunk program) —
+    # the query schedule ("ring"/"a2a") is just a registered backend
+    plan = stages.resolve_plan(cfg, schedule)
+    fn = pipeline.sharded_chunk_fn(cfg, mesh, plan)
+    lowered = fn.lower(signals_abs, parts_abs, SDS((), jnp.int32))
     compiled = lowered.compile()
     text = compiled.as_text()
     hl = hlo_lib.analyze(text)

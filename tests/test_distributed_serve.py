@@ -1,9 +1,10 @@
 """Bit-exact serving parity on a multi-device CPU mesh: ServeDriver over
 ``map_chunk_sharded`` and over the partitioned-index ``query:ring`` /
-``query:a2a`` backends — per-stream results and counter totals equal the
-single-device ``Mapper.map_signals`` (early_term off) / ``map_realtime``
-(early_term on) for random stream interleavings (subprocess, forced 4 CPU
-devices — run by scripts/run_tier1.sh's distributed pass)."""
+``query:a2a`` backends plus the out-of-core ``query:tiered`` hot-tile
+cache — per-stream results and counter totals equal the single-device
+``Mapper.map_signals`` (early_term off) / ``map_realtime`` (early_term
+on) for random stream interleavings (subprocess, forced 4 CPU devices —
+run by scripts/run_tier1.sh's distributed pass)."""
 import os
 import pathlib
 import subprocess
@@ -49,7 +50,7 @@ def submit_all(sd, order, streams):
         sid = next(s for s, rows in streams.items() if int(r) in rows)
         sd.submit(sid, reads.signals[int(r)])
 
-for backend in ("reference", "ring", "a2a"):
+for backend in ("reference", "ring", "a2a", "tiered"):
     mapper = Mapper(idx, cfg, backend=backend, mesh=mesh)
     for seed in (0, 1, 2):
         order, streams = interleave(seed)

@@ -1,0 +1,70 @@
+"""core/index.py error paths and invariants: the packed-entry overflow
+guard's exact boundary, layout guards shared by every bucket-range split
+(partition/tier/streaming build), and the entries_packed memoization the
+device-upload paths rely on."""
+import numpy as np
+import pytest
+
+from repro.core import MarsConfig, build_index
+from repro.core.index import (build_index_streaming, pack_entries,
+                              partition_index, tier_index)
+from repro.signal import simulate
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    # 16 buckets -> 4 bucket-implied spare bits for the in-entry count
+    return MarsConfig(hash_bits=4).with_mode("ms_fixed")
+
+
+def _entries(cfg, cnt_max, n=8):
+    keys = np.arange(n, dtype=np.uint32) * np.uint32(cfg.n_buckets)
+    pos = np.arange(n, dtype=np.int64)
+    cnt = np.full(n, cnt_max, np.int64)
+    return keys, pos, cnt
+
+
+def test_pack_entries_count_boundary(tiny_cfg):
+    """cnt == n_buckets - 1 is the largest representable in-entry count;
+    one more would corrupt the neighbouring key distinguisher bits."""
+    keys, pos, cnt = _entries(tiny_cfg, tiny_cfg.n_buckets - 1)
+    packed = pack_entries(keys, pos, cnt, tiny_cfg)
+    assert packed.shape == (2, keys.size) and packed.dtype == np.int32
+    # the count really lives in the low bits, the key in the high bits
+    got = packed[0].view(np.uint32)
+    assert np.all((got & np.uint32(tiny_cfg.n_buckets - 1)) == cnt)
+    assert np.all((got & ~np.uint32(tiny_cfg.n_buckets - 1)) == keys)
+
+    keys, pos, cnt = _entries(tiny_cfg, tiny_cfg.n_buckets)
+    with pytest.raises(ValueError, match="spare bits"):
+        pack_entries(keys, pos, cnt, tiny_cfg)
+
+
+@pytest.fixture(scope="module")
+def small_idx():
+    cfg = MarsConfig(hash_bits=10).with_mode("ms_fixed")
+    ref = simulate.make_reference(3_000, seed=11)
+    return build_index(ref.events_concat, ref.n_events, cfg), ref
+
+
+def test_partition_index_rejects_non_power_of_two(small_idx):
+    idx, _ = small_idx
+    with pytest.raises(ValueError, match="power of two"):
+        partition_index(idx, 3)
+    with pytest.raises(ValueError, match="power of two"):
+        tier_index(idx, 6)
+
+
+def test_build_index_streaming_rejects_non_power_of_two_tiles(small_idx):
+    _, ref = small_idx
+    cfg = MarsConfig(hash_bits=10).with_mode("ms_fixed")
+    with pytest.raises(ValueError, match="power of two"):
+        build_index_streaming(ref.events_concat, ref.n_events, cfg, 3)
+
+
+def test_entries_packed_memoized(small_idx):
+    """index_arrays / partition_index / tier_index all read the packed
+    planes; the property must hand back the SAME array every time (one
+    pack + one overflow check per build, no per-upload repacking)."""
+    idx, _ = small_idx
+    assert idx.entries_packed is idx.entries_packed

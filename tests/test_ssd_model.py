@@ -158,3 +158,31 @@ def test_serving_saturation():
     assert sv["p99"] == float("inf") and sv["p50"] == float("inf")
     with pytest.raises(ValueError, match="offered_load"):
         S.serving_latency(w, offered_load=0.0)
+
+
+def test_serving_latency_virtual_shape():
+    """The virtual twin keeps the core's contract: percentiles ordered,
+    sojourn >= one chunk dispatch even when idle, saturation at capacity."""
+    sv = S.serving_latency_virtual(chunk=8, offered_load=0.5 * 8)
+    assert not sv["saturated"]
+    assert sv["p99"] >= sv["p50"] >= sv["chunk_cost"]
+    assert S.serving_latency_virtual(8, offered_load=8.0)["saturated"]
+    with pytest.raises(ValueError, match="offered_load"):
+        S.serving_latency_virtual(8, offered_load=0.0)
+
+
+def test_serving_model_tracks_serve_driver_trace():
+    """Calibration contract (benchmarks/calibrate_serving.py): below
+    saturation the modeled p50 sojourn tracks the percentile of measured
+    ``ServeDriver`` virtual-time traces within 15%."""
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+    from benchmarks import calibrate_serving
+
+    mapper = calibrate_serving.default_mapper(hash_bits=12, ref_events=8_000)
+    rows = calibrate_serving.calibrate(mapper, chunk=8,
+                                       load_fracs=(0.3, 0.6), n_reads=96)
+    for r in rows:
+        assert not r["saturated"], r
+        assert abs(r["p50_ratio"] - 1.0) <= 0.15, r

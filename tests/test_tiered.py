@@ -1,0 +1,234 @@
+"""Out-of-core tiered index: streaming build byte-parity and the
+`query:tiered` bit-exactness contract.
+
+The whole point of the tiered backend is that tiling, cache size,
+eviction order and paging schedule are INVISIBLE to results: every
+MapOutput field and every CHUNK_COUNTER_SCHEMA counter must equal the
+resident-index path (and the unpacked oracle) for any cache
+configuration, including the cache-of-1 thrash regime where every chunk
+overflows the persistent slots.
+"""
+import numpy as np
+import pytest
+
+from repro.core import MarsConfig, Mapper, build_index, map_chunk, stages
+from repro.core.index import (build_index_streaming, index_arrays,
+                              tier_index)
+from repro.signal import simulate
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = MarsConfig(hash_bits=12).with_mode("ms_fixed")
+    ref = simulate.make_reference(8_000, seed=5)
+    reads = simulate.sample_reads(ref, 24, signal_len=cfg.signal_len,
+                                  seed=6, junk_frac=0.25)
+    idx = build_index(ref.events_concat, ref.n_events, cfg)
+    return cfg, ref, reads, idx
+
+
+@pytest.fixture(scope="module")
+def base_out(setup):
+    cfg, _, reads, idx = setup
+    return Mapper(idx, cfg).map_signals(reads.signals, chunk=8)
+
+
+def _assert_parity(base, out):
+    np.testing.assert_array_equal(np.asarray(base.t_start),
+                                  np.asarray(out.t_start))
+    np.testing.assert_array_equal(np.asarray(base.score),
+                                  np.asarray(out.score))
+    np.testing.assert_array_equal(np.asarray(base.mapped),
+                                  np.asarray(out.mapped))
+    np.testing.assert_array_equal(np.asarray(base.n_events),
+                                  np.asarray(out.n_events))
+    assert base.counters == out.counters
+
+
+# --------------------------------------------------------------------------- #
+# Streaming build
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("n_tiles", [1, 4, 16])
+@pytest.mark.parametrize("chunk_events", [1 << 9, 1 << 12, 1 << 20])
+def test_streaming_build_matches_in_memory(setup, n_tiles, chunk_events):
+    """Per-tile planes from the external streaming build are byte-identical
+    to tiling the in-memory build — for any block size (including one
+    bigger than the whole stream)."""
+    cfg, ref, _, idx = setup
+    want = tier_index(idx, n_tiles)
+    got = build_index_streaming(ref.events_concat, ref.n_events, cfg,
+                                n_tiles, chunk_events=chunk_events)
+    np.testing.assert_array_equal(want.tile_bucket_start,
+                                  got.tile_bucket_start)
+    np.testing.assert_array_equal(np.asarray(want.tile_entries_packed),
+                                  np.asarray(got.tile_entries_packed))
+    np.testing.assert_array_equal(want.tile_n_entries, got.tile_n_entries)
+    assert want.n_entries == got.n_entries == idx.n_entries
+
+
+def test_global_planes_roundtrip(setup):
+    cfg, ref, _, idx = setup
+    ti = build_index_streaming(ref.events_concat, ref.n_events, cfg, 8,
+                               chunk_events=1 << 10)
+    bs, packed = ti.global_planes()
+    np.testing.assert_array_equal(bs, idx.bucket_start)
+    np.testing.assert_array_equal(packed, idx.entries_packed)
+
+
+def test_streaming_build_memmap(setup, tmp_path):
+    """mmap_path keeps the padded entry plane in a memory-mapped file —
+    same bytes, usable end to end."""
+    cfg, ref, reads, idx = setup
+    ti = build_index_streaming(ref.events_concat, ref.n_events, cfg, 8,
+                               chunk_events=1 << 10,
+                               mmap_path=tmp_path / "tiles.npy")
+    assert isinstance(ti.tile_entries_packed, np.memmap)
+    want = tier_index(idx, 8)
+    np.testing.assert_array_equal(np.asarray(want.tile_entries_packed),
+                                  np.asarray(ti.tile_entries_packed))
+    base = Mapper(idx, cfg).map_signals(reads.signals, chunk=8)
+    out = Mapper(ti, cfg, backend="tiered",
+                 cache_slots=4).map_signals(reads.signals, chunk=8)
+    _assert_parity(base, out)
+
+
+# --------------------------------------------------------------------------- #
+# query:tiered bit-exactness
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("n_tiles", [2, 4, 16])
+@pytest.mark.parametrize("cache_slots", [1, 2, 16])
+def test_tiered_parity_tiles_x_cache(setup, base_out, n_tiles, cache_slots):
+    """Bit-identical to the resident path for every (tile count, cache
+    size) — cache_slots=1 with many tiles is the thrash regime where every
+    chunk takes the transient overflow view."""
+    cfg, _, reads, idx = setup
+    m = Mapper(idx, cfg, backend="tiered", tiles=n_tiles,
+               cache_slots=cache_slots)
+    _assert_parity(base_out, m.map_signals(reads.signals, chunk=8))
+    assert m.cache.n_chunks == 3
+    assert m.cache.misses >= 1                  # cold start always pages
+    assert m.cache.paged_bytes >= m.cache.misses * m.cache.tiered.tile_nbytes
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_tiered_parity_random_eviction(setup, base_out, seed):
+    """Eviction order must be invisible: the seeded random policy picks
+    arbitrary victims and the results still match bit for bit."""
+    cfg, _, reads, idx = setup
+    m = Mapper(idx, cfg, backend="tiered", tiles=16, cache_slots=4,
+               cache_policy="random", cache_seed=seed)
+    _assert_parity(base_out, m.map_signals(reads.signals, chunk=8))
+
+
+def test_tiered_parity_oracle(setup):
+    """Against the unpacked reference oracle (query_index_reference), per
+    chunk: same t_pos/hit_valid wherever hits exist, same counters."""
+    import jax.numpy as jnp
+
+    from repro.core.index import index_arrays_unpacked
+    from repro.core import seeding
+
+    cfg, _, reads, idx = setup
+    unpacked = {k: jnp.asarray(v)
+                for k, v in index_arrays_unpacked(idx).items()}
+    arrays = {k: jnp.asarray(v) for k, v in index_arrays(idx).items()}
+    m = Mapper(idx, cfg, backend="tiered", tiles=8, cache_slots=2)
+    sig = reads.signals[:8]
+    out_t = m.map_signals(sig, chunk=8)
+    out_r = Mapper(idx, cfg).map_signals(sig, chunk=8)
+    _assert_parity(out_r, out_t)
+    # spot-check the query stage itself against the oracle on real keys
+    plan = stages.resolve_plan(cfg)
+    st = {"signal": jnp.asarray(sig[0]), "counters": {}}
+    st = stages.execute_stages(st, arrays, cfg, plan,
+                               ("detect", "quantize", "seed"))
+    t_o, hv_o, c_o = seeding.query_index_reference(
+        st["keys"], st["seed_valid"], unpacked, cfg)
+    t_p, hv_p, c_p = seeding.query_index(st["keys"], st["seed_valid"],
+                                         arrays, cfg)
+    np.testing.assert_array_equal(np.asarray(hv_o), np.asarray(hv_p))
+    np.testing.assert_array_equal(np.asarray(t_o)[np.asarray(hv_o)],
+                                  np.asarray(t_p)[np.asarray(hv_p)])
+
+
+def test_counter_schema_unchanged(setup):
+    """The serving/workload contract: tiered chunks emit exactly
+    CHUNK_COUNTER_SCHEMA — the cache telemetry rides DEBUG_COUNTER_SCHEMA
+    and never reaches MapOutput.counters."""
+    cfg, _, reads, idx = setup
+    out = Mapper(idx, cfg, backend="tiered", tiles=8,
+                 cache_slots=4).map_signals(reads.signals[:8], chunk=8)
+    assert set(out.counters) == set(stages.CHUNK_COUNTER_SCHEMA)
+    for k in ("n_tile_hits", "n_tile_misses", "n_tile_paged_bytes"):
+        assert k in stages.DEBUG_COUNTER_SCHEMA
+
+
+def test_tiered_requires_prepared_view(setup):
+    """Feeding map_chunk a tiered plan with the resident arrays (no
+    HotTileCache view) fails loudly, not silently wrong."""
+    import jax.numpy as jnp
+
+    cfg, _, reads, idx = setup
+    arrays = {k: jnp.asarray(v) for k, v in index_arrays(idx).items()}
+    plan = stages.resolve_plan(cfg, "tiered")
+    with pytest.raises(ValueError, match="HotTileCache"):
+        map_chunk(jnp.asarray(reads.signals[:8]), arrays, cfg, plan=plan)
+
+
+def test_cache_stats_and_prefetch(setup):
+    """LRU keeps hot tiles resident across chunks (hit rate grows after the
+    cold start) and the telemetry adds up."""
+    cfg, _, reads, idx = setup
+    m = Mapper(idx, cfg, backend="tiered", tiles=16, cache_slots=16)
+    m.map_signals(reads.signals, chunk=8)
+    c = m.cache
+    touches = c.hits + c.misses
+    assert touches > 0 and c.hits > 0            # warm chunks re-hit tiles
+    assert c.hit_rate == c.hits / touches
+    assert c.paged_bytes == c.misses * c.tiered.tile_nbytes
+    # a second pass over the same reads is fully warm
+    h0, m0 = c.hits, c.misses
+    m.map_signals(reads.signals, chunk=8)
+    assert c.misses == m0 and c.hits > h0
+
+
+# --------------------------------------------------------------------------- #
+# Sharded + serving
+# --------------------------------------------------------------------------- #
+def test_tiered_sharded_parity(setup, base_out):
+    """map_chunk_sharded with the tiered view (replicated over a 1-device
+    mesh — multi-device parity rides tests/test_distributed_serve.py)."""
+    import jax
+    from jax.sharding import Mesh
+
+    cfg, _, reads, idx = setup
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    m = Mapper(idx, cfg, backend="tiered", mesh=mesh, tiles=8,
+               cache_slots=4)
+    _assert_parity(base_out, m.map_signals(reads.signals, chunk=8))
+
+
+@pytest.mark.parametrize("cache_slots", [1, 4])
+def test_tiered_serve_parity(setup, cache_slots):
+    """ServeDriver over the tiered mapper: per-stream results equal mapping
+    each stream alone, for an adversarial interleaving — chunk composition
+    must not change which tiles are resident when a read is served."""
+    cfg, _, reads, idx = setup
+    m = Mapper(idx, cfg, backend="tiered", tiles=8, cache_slots=cache_slots)
+    rng = np.random.default_rng(0)
+    owner = rng.integers(0, 3, 16)
+    order = rng.permutation(16)
+    sd = m.serve(chunk=8)
+    for r in order:
+        sd.submit(f"s{owner[r]}", reads.signals[int(r)])
+    sd.drain()
+    for k in range(3):
+        rows = [int(r) for r in order if owner[r] == k]
+        if not rows:
+            continue
+        want = m.map_signals(reads.signals[np.asarray(rows)], chunk=8)
+        got = sd.results(f"s{k}")
+        np.testing.assert_array_equal(got.t_start, np.asarray(want.t_start))
+        np.testing.assert_array_equal(got.score, np.asarray(want.score))
+        np.testing.assert_array_equal(got.mapped, np.asarray(want.mapped))
+    assert set(sd.counters) == set(stages.CHUNK_COUNTER_SCHEMA)
