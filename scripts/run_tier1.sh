@@ -15,7 +15,11 @@
 #                                   # uncommitted BENCH_pipeline.json drift
 #                                   # (the committed baseline must match the
 #                                   # tree being tested). Combinable with
-#                                   # --bench / --all.
+#                                   # --bench / --all / --faults.
+#   scripts/run_tier1.sh --faults   # + the seeded fault-injection sweep
+#                                   # (scripts/fault_sweep.py): tile
+#                                   # corruption x drive loss x overload,
+#                                   # deterministic from its seed
 #   scripts/run_tier1.sh tests/test_pipeline.py   # extra pytest args pass through
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -32,11 +36,14 @@ fi
 MARKER=(-m "not slow")
 BENCH=0
 CI=0
-while [[ "${1:-}" == "--all" || "${1:-}" == "--bench" || "${1:-}" == "--ci" ]]; do
+FAULTS=0
+while [[ "${1:-}" == "--all" || "${1:-}" == "--bench" || "${1:-}" == "--ci" \
+         || "${1:-}" == "--faults" ]]; do
     case "$1" in
-        --all)   MARKER=() ;;
-        --bench) BENCH=1 ;;
-        --ci)    CI=1 ;;
+        --all)    MARKER=() ;;
+        --bench)  BENCH=1 ;;
+        --ci)     CI=1 ;;
+        --faults) FAULTS=1 ;;
     esac
     shift
 done
@@ -66,4 +73,10 @@ XLA_FLAGS="--xla_force_host_platform_device_count=4" \
 
 if [[ "$BENCH" == 1 ]]; then
     python scripts/bench_pipeline.py --check
+fi
+
+if [[ "$FAULTS" == 1 ]]; then
+    # degraded-mode gate: tile corruption x drive loss x overload, seeded
+    # so a red run reproduces exactly (scripts/fault_sweep.py --seed N)
+    python scripts/fault_sweep.py
 fi

@@ -8,21 +8,30 @@ Public API:
     map_chunk_sharded     data-parallel mapping over a device mesh
     driver                unified streaming host driver + ProgressLog
     ServeDriver           continuous-batching multi-stream serving driver
+    SLOClass              serving class (priority/deadline/shed contract)
+    FaultPlan             seeded storage-fault injection harness
+    repartition_index     online drive-loss rebalancing (N -> N/2 fold)
     score_accuracy        P/R/F1 vs. ground truth
 """
 from repro.core import driver, stages
-from repro.core.server import ServeDriver, StreamReport
+from repro.core.server import (ClassReport, ServeDriver, SLOClass,
+                               StreamReport)
 from repro.core.config import (DEFAULT, MODE_MS_FIXED, MODE_MS_FLOAT,
                                MODE_RH2, MODES, MarsConfig)
+from repro.core.faults import (FaultPlan, InjectedPrefetchError,
+                               TileReadError, sample_fault_plans)
 from repro.core.index import (Index, build_index, index_arrays,
-                              index_arrays_unpacked, partition_index)
+                              index_arrays_unpacked, partition_index,
+                              repartition_index)
 from repro.core.pipeline import (MapOutput, Mapper, map_chunk,
                                  map_chunk_sharded, map_read, score_accuracy)
 
 __all__ = [
     "DEFAULT", "MODES", "MODE_RH2", "MODE_MS_FLOAT", "MODE_MS_FIXED",
     "MarsConfig", "Index", "build_index", "index_arrays",
-    "index_arrays_unpacked", "partition_index",
+    "index_arrays_unpacked", "partition_index", "repartition_index",
     "MapOutput", "Mapper", "map_chunk", "map_chunk_sharded", "map_read",
     "driver", "stages", "score_accuracy", "ServeDriver", "StreamReport",
+    "SLOClass", "ClassReport", "FaultPlan", "TileReadError",
+    "InjectedPrefetchError", "sample_fault_plans",
 ]

@@ -70,8 +70,14 @@ def stream_map(map_fn: Callable[[np.ndarray, int], "MapOutput"],
     core/tiered.py) overlaps chunk i's compute.  Without it the pull order
     is unchanged — live chunk sources (the serving driver's ready queue)
     depend on the exact pull timing.
+
+    A ``prefetch`` exception does NOT abandon the chunk already in flight
+    on the device: the loop stops reading ahead, drains every dispatched
+    chunk through the iterator, and re-raises the failure once at the end
+    of the stream.
     """
     pending = None
+    exc = None
     if prefetch is None:
         for ci, n_valid, sig in chunks:
             out = map_fn(sig, n_valid)      # async dispatch
@@ -82,18 +88,28 @@ def stream_map(map_fn: Callable[[np.ndarray, int], "MapOutput"],
         it = iter(chunks)
         nxt = next(it, None)
         if nxt is not None:
-            prefetch(nxt[2], nxt[1])
+            try:
+                prefetch(nxt[2], nxt[1])
+            except Exception as e:          # nothing in flight yet
+                exc, nxt = e, None
         while nxt is not None:
             ci, n_valid, sig = nxt
             out = map_fn(sig, n_valid)      # async dispatch
             nxt = next(it, None)
             if nxt is not None:
-                prefetch(nxt[2], nxt[1])    # stage next chunk's tiles
+                try:
+                    prefetch(nxt[2], nxt[1])  # stage next chunk's tiles
+                except Exception as e:
+                    # chunk ci is mid-flight on the device: let it finish
+                    # and yield, surface the prefetch failure at the tail
+                    exc, nxt = e, None
             if pending is not None:
                 yield _to_host(*pending)
             pending = (ci, n_valid, out)
     if pending is not None:
         yield _to_host(*pending)
+    if exc is not None:
+        raise exc
 
 
 def _to_host(ci: int, n_valid: int, out) -> Tuple[int, int, "MapOutput"]:

@@ -34,6 +34,8 @@ unpacked per-field arrays remain on the Index (offline source of truth,
 from __future__ import annotations
 
 import dataclasses
+import zlib
+from typing import Optional
 
 import numpy as np
 
@@ -238,9 +240,74 @@ def partition_index(index: Index, n_parts: int):
     return dict(p_bucket_start=bstart, p_entries_packed=packed)
 
 
+def repartition_index(index: Index, n_parts: int, failed: int, parts=None):
+    """Online drive-failure rebalancing: fold the failed drive's bucket
+    range onto the survivors by HALVING the partition count (N -> N/2 —
+    the owner rule stays `bucket >> log2(range)`, so the power-of-two
+    invariants of ``partition_index`` survive a single-drive loss).
+
+    Merged partition p owns the union of old partitions (2p, 2p+1):
+    entries are the pairwise concatenation of the old planes (global
+    bucket order preserved) and local bucket offsets rebase, so the result
+    is BIT-IDENTICAL to a fresh ``partition_index(index, n_parts // 2)``
+    — the rebalance parity oracle (tests/test_faults.py).  ``parts`` may
+    pass the live N-partition pytree to merge from (the online path:
+    survivors re-serve their resident planes; the failed rank's range is
+    re-read from the host/flash replica — here the same plane, since this
+    reproduction keeps the source index on the host).
+
+    Returns ``(parts_half, remap)``: the N/2-partition pytree plus the
+    remap table ``remap[p]`` = the surviving old drive serving merged
+    partition p (old drive 2p when it survived, else 2p+1 — the partner
+    already holds half the merged range, so data movement is minimal).
+    """
+    if n_parts < 2 or (n_parts & (n_parts - 1)):
+        raise ValueError(f"n_parts must be a power of two >= 2 to fold a "
+                         f"failed drive onto survivors; got {n_parts}")
+    if not 0 <= failed < n_parts:
+        raise ValueError(f"failed drive must be in [0, {n_parts}); "
+                         f"got {failed}")
+    if parts is None:
+        parts = partition_index(index, n_parts)
+    bs = np.asarray(parts["p_bucket_start"])
+    pk = np.asarray(parts["p_entries_packed"])
+    half = n_parts // 2
+    bl = bs.shape[1] - 1                      # buckets per OLD partition
+    sizes = bs[:, -1].astype(np.int64)        # true entries per partition
+    emax = max(int((sizes[0::2] + sizes[1::2]).max()), 1)
+    packed = np.zeros((half, 2, emax), np.int32)
+    bstart = np.zeros((half, 2 * bl + 1), np.int32)
+    remap = []
+    for p in range(half):
+        a, b = 2 * p, 2 * p + 1
+        na, nb = int(sizes[a]), int(sizes[b])
+        packed[p, :, :na] = pk[a, :, :na]
+        packed[p, :, na:na + nb] = pk[b, :, :nb]
+        bstart[p, :bl + 1] = bs[a]
+        bstart[p, bl:] = bs[b] + na
+        remap.append(a if a != failed else b)
+    return (dict(p_bucket_start=bstart, p_entries_packed=packed),
+            tuple(remap))
+
+
 # --------------------------------------------------------------------------- #
 # Out-of-core tiered index (host-resident bucket-range tiles)
 # --------------------------------------------------------------------------- #
+def tile_checksum(bstart_row: np.ndarray, ent_tile: np.ndarray) -> int:
+    """CRC32 of one tile's planes (the (bl+1,) local offsets chained with
+    the padded (2, emax) packed rows) — computed over the exact bytes that
+    page into a device cache slot, so ``HotTileCache`` can verify every
+    page-in and a corrupted transfer can never silently serve hits.
+    CRC32 detects all single-bit and burst-<=32-bit errors, so every
+    injected corruption (core/faults.py flips one bit) is caught.
+    ``tier_index`` and ``build_index_streaming`` both compute it from the
+    same (byte-identical) planes, so their checksum arrays agree too."""
+    c = zlib.crc32(np.ascontiguousarray(bstart_row, np.int32).tobytes())
+    c = zlib.crc32(np.ascontiguousarray(ent_tile, np.int32).tobytes(), c)
+    return c & 0xFFFFFFFF
+
+
+
 @dataclasses.dataclass
 class TieredIndex:
     """The packed planes split into power-of-two bucket-range *tiles* that
@@ -264,6 +331,21 @@ class TieredIndex:
     n_ref_events: int
     n_entries: int
     cfg: MarsConfig
+    # (n_tiles,) uint32 per-tile CRC32 (``tile_checksum``) verified at every
+    # cache page-in; builders populate it, hand-built instances get it
+    # lazily on first access
+    tile_checksums: Optional[np.ndarray] = None
+
+    def checksum(self, t: int) -> int:
+        """The expected CRC32 of tile ``t``'s planes, computing (and
+        memoizing) the checksum array when the instance was built without
+        one."""
+        if self.tile_checksums is None:
+            self.tile_checksums = np.asarray(
+                [tile_checksum(self.tile_bucket_start[i],
+                               self.tile_entries_packed[i])
+                 for i in range(self.n_tiles)], np.uint32)
+        return int(self.tile_checksums[t])
 
     @property
     def n_tiles(self) -> int:
@@ -321,7 +403,11 @@ def tier_index(index: Index, n_tiles: int) -> TieredIndex:
         tile_n_entries=sizes,
         n_ref_events=index.n_ref_events,
         n_entries=index.n_entries,
-        cfg=index.cfg)
+        cfg=index.cfg,
+        tile_checksums=np.asarray(
+            [tile_checksum(parts["p_bucket_start"][t],
+                           parts["p_entries_packed"][t])
+             for t in range(n_tiles)], np.uint32))
 
 
 def build_index_streaming(ref_events_concat: np.ndarray, n_ref_events: int,
@@ -428,6 +514,7 @@ def build_index_streaming(ref_events_concat: np.ndarray, n_ref_events: int,
     else:
         packed = np.zeros((n_tiles, 2, emax), np.int32)
     bstart = np.zeros((n_tiles, bl + 1), np.int32)
+    checksums = np.zeros(n_tiles, np.uint32)
     for t in range(n_tiles):
         keys_t = (np.concatenate(spill_keys[t]) if spill_keys[t]
                   else np.zeros(0, np.uint32))
@@ -452,9 +539,12 @@ def build_index_streaming(ref_events_concat: np.ndarray, n_ref_events: int,
         cnt_s = np.minimum(cnt_s, np.iinfo(np.int32).max).astype(np.int32)
         packed[t, :, :keys_s.size] = pack_entries(
             keys_s.astype(np.uint32), pos_s, cnt_s, cfg)
+        # planes are byte-identical to tier_index's (asserted in tests),
+        # so the per-tile CRCs agree between the two builders too
+        checksums[t] = tile_checksum(bstart[t], packed[t])
     if mmap_path is not None:
         packed.flush()
     return TieredIndex(
         tile_bucket_start=bstart, tile_entries_packed=packed,
         tile_n_entries=sizes, n_ref_events=n_ref_events,
-        n_entries=int(sizes.sum()), cfg=cfg)
+        n_entries=int(sizes.sum()), cfg=cfg, tile_checksums=checksums)

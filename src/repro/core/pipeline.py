@@ -418,12 +418,20 @@ class Mapper:
     telemetry.  ``index`` may also be a pre-built ``TieredIndex`` (e.g.
     from the streaming ``build_index_streaming``), in which case ``tiles``
     is ignored.
+
+    ``fault_plan`` (tiered backend only) attaches a seeded
+    ``core/faults.FaultPlan`` injection harness to the cache's page-in
+    path; ``cache_retries`` / ``cache_backoff`` bound the checksummed
+    retry loop (core/tiered.py).  A plan injecting nothing is
+    byte-identical to no plan at all.
     """
 
     def __init__(self, index: Index, cfg: Optional[MarsConfig] = None,
                  use_kernels: bool = False, backend: Optional[str] = None,
                  mesh=None, tiles: int = 8, cache_slots: int = 4,
-                 cache_policy: str = "lru", cache_seed: int = 0):
+                 cache_policy: str = "lru", cache_seed: int = 0,
+                 fault_plan=None, cache_retries: int = 3,
+                 cache_backoff: float = 1.0):
         self.index = index
         self.cfg = cfg or index.cfg
         self.backend = backend or (
@@ -431,13 +439,23 @@ class Mapper:
         self.plan = stages.resolve_plan(self.cfg, self.backend)
         self.mesh = mesh
         self.cache = None
+        if (fault_plan is not None
+                and stages.plan_index_kind(self.plan) != "tiered"):
+            raise ValueError(
+                f"fault_plan hooks the tiered backend's tile page-in path; "
+                f"backend {self.backend!r} resolves to index kind "
+                f"{stages.plan_index_kind(self.plan)!r} (no page-in to "
+                "inject into)")
         if stages.plan_index_kind(self.plan) == "tiered":
             from repro.core.index import TieredIndex, tier_index
             from repro.core.tiered import HotTileCache
             ti = (index if isinstance(index, TieredIndex)
                   else tier_index(index, tiles))
             self.cache = HotTileCache(ti, cache_slots, mesh=mesh,
-                                      policy=cache_policy, seed=cache_seed)
+                                      policy=cache_policy, seed=cache_seed,
+                                      faults=fault_plan,
+                                      max_retries=cache_retries,
+                                      backoff_base=cache_backoff)
             self.arrays = None
         elif stages.plan_index_kind(self.plan) == "partitioned":
             from repro.core.index import INDEX_AXIS, partition_index

@@ -48,8 +48,20 @@ tests/test_distributed_serve.py).
 Time: the driver keeps a *virtual clock* (arbitrary units) used for
 arrival traces, deadlines and per-read latency accounting — every
 dispatched chunk advances it by ``chunk_cost`` scaled by the prefix
-fraction.  Wall-clock throughput is measured separately by the caller
+fraction, and virtual time the tiered storage path loses to page-in
+retry/backoff (``HotTileCache.vtime_penalty``) is folded in as it
+accrues.  Wall-clock throughput is measured separately by the caller
 (benchmarks/microbench.py, launch/serve_rsga.py).
+
+Overload (the closed loop): with ``shed=True`` the driver feeds its own
+trailing offered load into the analytic serving model
+(``ssd_model.serving_latency_virtual``) and, while the model reports
+``saturated``, sheds the least-worthy sheddable read (lowest priority,
+then latest deadline, then newest) per admission and — with
+``early_term`` — packs the SHORTEST prefix stage first so slots free as
+early as possible.  ``SLOClass`` tags reads with per-class priority /
+relative-deadline defaults and a shed exemption; ``class_report()``
+aggregates latency percentiles per class.
 """
 from __future__ import annotations
 
@@ -60,7 +72,26 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import driver
+from repro.core import driver, ssd_model
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOClass:
+    """One serving class.  ``priority`` / ``deadline`` are admission
+    defaults (``deadline`` is RELATIVE: virtual-time budget from arrival);
+    ``sheddable=False`` exempts the class from closed-loop load shedding
+    (it can still be rejected by the hard ``max_queue`` bound)."""
+    name: str
+    priority: int = 0
+    deadline: float = math.inf
+    sheddable: bool = True
+
+    def __post_init__(self):
+        if not self.name:
+            raise ValueError("SLO class needs a non-empty name")
+        if self.deadline <= 0:
+            raise ValueError(f"SLO deadline must be a positive relative "
+                             f"budget; got {self.deadline}")
 
 
 @dataclasses.dataclass
@@ -74,10 +105,17 @@ class _Slot:
     deadline: float
     seq: int                  # global admission order (fairness tie-break)
     stage: int = 0            # current prefix-ladder stage
+    slo: Optional[str] = None # SLO class name (None = untagged)
+    sheddable: bool = True
 
     def rank(self) -> Tuple:
         """Scheduling rank: smaller is served first."""
         return (-self.priority, self.deadline, self.seq)
+
+    def shed_rank(self) -> Tuple:
+        """Shedding rank: SMALLER is shed first — lowest priority, then
+        latest deadline, then newest admission."""
+        return (self.priority, -self.deadline, -self.seq)
 
 
 @dataclasses.dataclass
@@ -91,8 +129,11 @@ class StreamState:
     stage_of: List[int] = dataclasses.field(default_factory=list)
     latency: List[float] = dataclasses.field(default_factory=list)
     admitted: List[bool] = dataclasses.field(default_factory=list)
+    slo_of: List[Optional[str]] = dataclasses.field(default_factory=list)
     n_rejected: int = 0
     n_done: int = 0
+    n_shed: int = 0           # closed-loop shed (subset of n_rejected)
+    n_nonfinite: int = 0      # NaN/Inf rows refused at admission (ditto)
 
     def _new_read(self) -> int:
         self.t_start.append(0)
@@ -103,6 +144,7 @@ class StreamState:
         self.stage_of.append(-1)
         self.latency.append(math.inf)
         self.admitted.append(True)
+        self.slo_of.append(None)
         return len(self.t_start) - 1
 
 
@@ -112,6 +154,22 @@ class StreamReport:
     n_reads: int
     n_mapped: int
     n_rejected: int
+    p50_latency: float
+    p99_latency: float
+    mean_latency: float
+    n_shed: int = 0
+    n_nonfinite: int = 0
+
+
+@dataclasses.dataclass
+class ClassReport:
+    """Per-SLO-class serving summary, aggregated across streams
+    (``name=None`` collects untagged reads)."""
+    name: Optional[str]
+    n_reads: int
+    n_mapped: int
+    n_rejected: int
+    n_shed: int
     p50_latency: float
     p99_latency: float
     mean_latency: float
@@ -147,13 +205,27 @@ class ServeDriver:
     drop_expired: drop queued reads whose deadline passed at packing
                   time (recorded as rejected; off by default so parity
                   holds for any deadline assignment).
+    slo_classes:  ``SLOClass`` definitions reads can be submitted under
+                  (per-class priority/deadline defaults + shed exemption
+                  + ``class_report()`` accounting).
+    shed:         close the loop: while the analytic serving model
+                  (``ssd_model.serving_latency_virtual`` at the trailing
+                  offered load) reports ``saturated``, shed the
+                  least-worthy sheddable read per admission and (with
+                  early_term) pack shortest-prefix chunks first.  Off by
+                  default — a shed-free driver is bit-identical to the
+                  pre-shed ServeDriver.
+    shed_window:  trailing virtual-time window the offered load is
+                  measured over.
     """
 
     def __init__(self, mapper, chunk: int = 64, max_queue: int = 4096,
                  early_term: bool = False,
                  prefix_stages: Optional[Sequence[int]] = None,
                  min_score: float = 8.0, chunk_cost: float = 1.0,
-                 drop_expired: bool = False):
+                 drop_expired: bool = False,
+                 slo_classes: Optional[Sequence[SLOClass]] = None,
+                 shed: bool = False, shed_window: float = 8.0):
         self.mapper = mapper
         self.cfg = mapper.cfg
         self.chunk = int(chunk)
@@ -162,6 +234,19 @@ class ServeDriver:
         self.min_score = float(min_score)
         self.chunk_cost = float(chunk_cost)
         self.drop_expired = bool(drop_expired)
+        self.slo_classes: Dict[str, SLOClass] = {
+            c.name: c for c in (slo_classes or ())}
+        self.shed = bool(shed)
+        if shed_window <= 0:
+            raise ValueError(f"shed_window must be > 0 virtual time units; "
+                             f"got {shed_window}")
+        self.shed_window = float(shed_window)
+        # virtual time the tiered storage path loses to page-in
+        # retry/backoff is folded into the serving clock as it accrues
+        # (zero on the happy path -> parity intact)
+        self._cache = getattr(mapper, "cache", None)
+        self._vtime_seen = float(getattr(self._cache, "vtime_penalty", 0.0)
+                                 or 0.0)
 
         S = self.cfg.signal_len
         if early_term:
@@ -188,6 +273,7 @@ class ServeDriver:
         self.counters: Dict[str, int] = {}
         self.n_chunks = 0
         self.n_pad_rows = 0
+        self.n_shed = 0
         self._queue: List[_Slot] = []
         self._streams: Dict[str, StreamState] = {}
         self._arrivals: collections.deque = collections.deque()
@@ -195,6 +281,8 @@ class ServeDriver:
         self._inflight: Dict[int, Tuple[int, List[_Slot], float]] = {}
         self._stage_fifo: collections.deque = collections.deque()
         self._seq = 0
+        self._admit_times: collections.deque = collections.deque()
+        self._shed_by_class: Dict[Optional[str], int] = {}
 
     # ------------------------------------------------------------------ #
     # Admission (bounded queue, priority-aware backpressure)
@@ -202,27 +290,57 @@ class ServeDriver:
     def stream(self, stream_id: str) -> StreamState:
         return self._streams.setdefault(stream_id, StreamState())
 
-    def submit(self, stream_id: str, signals: np.ndarray, priority: int = 0,
-               deadline: float = math.inf, t: Optional[float] = None) -> int:
+    def submit(self, stream_id: str, signals: np.ndarray,
+               priority: Optional[int] = None,
+               deadline: Optional[float] = None,
+               t: Optional[float] = None,
+               slo: Optional[str] = None) -> int:
         """Admit a batch of reads for ``stream_id``.  Returns the number
         admitted; the rest were rejected (or evicted a worse read whose
         stream records the rejection).  ``t`` stamps the virtual arrival
-        time (defaults to the current clock; never rewinds it)."""
+        time (defaults to the current clock; never rewinds it).
+
+        ``slo`` names a registered ``SLOClass`` supplying priority /
+        deadline defaults (its deadline is a RELATIVE budget from ``t``)
+        and the shed exemption; explicit ``priority`` / ``deadline``
+        override the class.  Rows containing NaN/Inf are refused at
+        admission (counted per stream as ``n_nonfinite``, recorded as
+        rejected) — they would otherwise poison every chunk-mate's
+        counters inside ``map_chunk``."""
         signals = np.asarray(signals, np.float32)
         if signals.ndim == 1:
             signals = signals[None]
         if signals.shape[1] != self.cfg.signal_len:
             raise ValueError(f"signals must be (n, {self.cfg.signal_len}); "
                              f"got {signals.shape}")
+        cls = None
+        if slo is not None:
+            cls = self.slo_classes.get(slo)
+            if cls is None:
+                raise ValueError(f"unknown SLO class {slo!r}; registered: "
+                                 f"{sorted(self.slo_classes)}")
         t = self.clock if t is None else float(t)
         self.clock = max(self.clock, t)
+        prio = int(priority) if priority is not None else (
+            cls.priority if cls else 0)
+        dl = float(deadline) if deadline is not None else (
+            t + cls.deadline if cls else math.inf)
         st = self.stream(stream_id)
+        finite = np.isfinite(signals).all(axis=1)
         admitted = 0
-        for row in signals:
+        for row, ok in zip(signals, finite):
             idx = st._new_read()
+            st.slo_of[idx] = slo
+            if not ok:
+                st.n_nonfinite += 1
+                st.admitted[idx] = False
+                st.n_rejected += 1
+                st.n_done += 1
+                continue
+            self._admit_times.append(t)
             slot = _Slot(stream=stream_id, idx=idx, signal=row, t_arrive=t,
-                         priority=int(priority), deadline=float(deadline),
-                         seq=self._seq)
+                         priority=prio, deadline=dl, seq=self._seq, slo=slo,
+                         sheddable=cls.sheddable if cls else True)
             self._seq += 1
             if self._admit(slot):
                 admitted += 1
@@ -236,7 +354,35 @@ class ServeDriver:
         return len(self._queue) + sum(len(slots) for _, slots, _t
                                       in self._inflight.values())
 
+    def _saturated(self) -> bool:
+        """The closed loop's overload signal: trailing offered load (reads
+        per virtual time over ``shed_window``) fed to the analytic serving
+        model; True when it reports no steady state at this chunk
+        capacity."""
+        horizon = self.clock - self.shed_window
+        while self._admit_times and self._admit_times[0] < horizon:
+            self._admit_times.popleft()
+        if not self._admit_times:
+            return False
+        load = len(self._admit_times) / self.shed_window
+        return bool(ssd_model.serving_latency_virtual(
+            self.chunk, load, self.chunk_cost)["saturated"])
+
     def _admit(self, slot: _Slot) -> bool:
+        if self.shed and self._saturated():
+            # shed the least-worthy sheddable read: lowest priority, then
+            # latest deadline, then newest — the new read itself when it
+            # is the least worthy
+            cands = [s for s in self._queue if s.sheddable]
+            if slot.sheddable:
+                cands.append(slot)
+            if cands:
+                victim = min(cands, key=_Slot.shed_rank)
+                if victim is slot:
+                    self._shed(slot)
+                    return False
+                self._queue.remove(victim)
+                self._shed(victim)
         if self._outstanding() < self.max_queue:
             self._queue.append(slot)
             return True
@@ -250,6 +396,13 @@ class ServeDriver:
         self._reject(slot)
         return False
 
+    def _shed(self, slot: _Slot) -> None:
+        self.n_shed += 1
+        self._streams[slot.stream].n_shed += 1
+        self._shed_by_class[slot.slo] = \
+            self._shed_by_class.get(slot.slo, 0) + 1
+        self._reject(slot)
+
     def _reject(self, slot: _Slot) -> None:
         st = self._streams[slot.stream]
         st.admitted[slot.idx] = False
@@ -261,10 +414,10 @@ class ServeDriver:
     # ------------------------------------------------------------------ #
     def _admit_due(self) -> None:
         while self._arrivals and self._arrivals[0][0] <= self.clock:
-            t, stream_id, signals, priority, deadline = \
+            t, stream_id, signals, priority, deadline, slo = \
                 self._arrivals.popleft()
             self.submit(stream_id, signals, priority=priority,
-                        deadline=deadline, t=t)
+                        deadline=deadline, t=t, slo=slo)
 
     def _next_chunk(self) -> Optional[driver.Chunk]:
         self._admit_due()
@@ -277,6 +430,12 @@ class ServeDriver:
             return None
         self._queue.sort(key=_Slot.rank)
         stage = self._queue[0].stage
+        if (self.shed and self.early_term and len(self.stages) > 1
+                and self._saturated()):
+            # early-term-first degradation: under overload pack the
+            # SHORTEST prefix stage present — the cheapest chunk, with the
+            # best odds of resolving reads early and freeing slots
+            stage = min(s.stage for s in self._queue)
         take, rest = [], []
         for s in self._queue:
             (take if (s.stage == stage and len(take) < self.chunk)
@@ -306,7 +465,16 @@ class ServeDriver:
         # stream_map dispatches each chunk right after pulling it from the
         # source, so the FIFO of stage ids pushed by _next_chunk is in
         # dispatch order.
-        return self._stage_fns[self._stage_fifo.popleft()](signals, n_valid)
+        out = self._stage_fns[self._stage_fifo.popleft()](signals, n_valid)
+        if self._cache is not None:
+            # charge storage-path retry/backoff virtual time (accrued
+            # paging this chunk's tiles) to the serving clock; zero on the
+            # happy path
+            pen = float(self._cache.vtime_penalty)
+            if pen > self._vtime_seen:
+                self.clock += pen - self._vtime_seen
+                self._vtime_seen = pen
+        return out
 
     def _route(self, ci: int, n_valid: int, out) -> None:
         stage, slots, done_t = self._inflight.pop(ci)
@@ -383,16 +551,20 @@ class ServeDriver:
         """Run an arrival trace to completion.
 
         ``trace`` rows are ``(t, stream_id, signals[, priority[,
-        deadline]])`` in virtual-time units; rows need not be sorted.
-        Returns the per-stream reports (``report()``)."""
+        deadline[, slo]]])`` in virtual-time units; rows need not be
+        sorted.  ``priority`` / ``deadline`` may be None to take the SLO
+        class defaults.  Returns the per-stream reports (``report()``)."""
         rows = []
         for row in trace:
             t, stream_id, signals = row[0], row[1], row[2]
-            priority = row[3] if len(row) > 3 else 0
-            deadline = row[4] if len(row) > 4 else math.inf
+            priority = row[3] if len(row) > 3 else None
+            deadline = row[4] if len(row) > 4 else None
+            slo = row[5] if len(row) > 5 else None
             rows.append((float(t), str(stream_id),
-                         np.asarray(signals, np.float32), int(priority),
-                         float(deadline)))
+                         np.asarray(signals, np.float32),
+                         None if priority is None else int(priority),
+                         None if deadline is None else float(deadline),
+                         None if slo is None else str(slo)))
         rows.sort(key=lambda r: r[0])
         self._arrivals.extend(rows)
         self.drain()
@@ -428,6 +600,38 @@ class ServeDriver:
             out[sid] = StreamReport(
                 n_reads=len(st.latency), n_mapped=int(sum(st.mapped)),
                 n_rejected=st.n_rejected,
+                p50_latency=float(np.percentile(lat, 50)) if lat.size else math.nan,
+                p99_latency=float(np.percentile(lat, 99)) if lat.size else math.nan,
+                mean_latency=float(lat.mean()) if lat.size else math.nan,
+                n_shed=st.n_shed, n_nonfinite=st.n_nonfinite)
+        return out
+
+    def class_report(self) -> Dict[Optional[str], ClassReport]:
+        """Per-SLO-class latency accounting aggregated across streams.
+        Keyed by class name (None = reads submitted without a class)."""
+        acc: Dict[Optional[str], Dict] = {}
+
+        def bucket(name):
+            return acc.setdefault(name, dict(n_reads=0, n_mapped=0,
+                                             n_rejected=0, lat=[]))
+        for st in self._streams.values():
+            for i, name in enumerate(st.slo_of):
+                b = bucket(name)
+                b["n_reads"] += 1
+                b["n_mapped"] += bool(st.mapped[i])
+                if not st.admitted[i]:
+                    b["n_rejected"] += 1
+                elif math.isfinite(st.latency[i]):
+                    b["lat"].append(st.latency[i])
+        for name in self._shed_by_class:
+            bucket(name)
+        out = {}
+        for name, b in acc.items():
+            lat = np.asarray(b["lat"], np.float64)
+            out[name] = ClassReport(
+                name=name, n_reads=b["n_reads"], n_mapped=b["n_mapped"],
+                n_rejected=b["n_rejected"],
+                n_shed=self._shed_by_class.get(name, 0),
                 p50_latency=float(np.percentile(lat, 50)) if lat.size else math.nan,
                 p99_latency=float(np.percentile(lat, 99)) if lat.size else math.nan,
                 mean_latency=float(lat.mean()) if lat.size else math.nan)

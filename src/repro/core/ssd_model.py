@@ -328,16 +328,37 @@ class SSDArrayConfig:
     host (t_start + score + flags); ``t_dispatch`` is the host-side
     orchestration cost per drive per batch (NVMe submission + completion
     handling).
+
+    ``n_failed`` models the degraded array after a single-drive loss
+    rebalanced by ``core/index.repartition_index``: the power-of-two
+    partitioning folds to N/2 halves (each surviving pair's bucket ranges
+    merge), so exactly ``n_serving = n_ssds // 2`` drives serve the whole
+    index — every serving drive's share doubles, which is what the
+    latency / energy / queueing models charge.
     """
     n_ssds: int = 4
     ssd: SSDConfig = SSDConfig()
     result_bytes_per_read: int = 16
     t_dispatch: float = 20e-6          # s per drive per batch
+    n_failed: int = 0                  # 0 healthy, 1 degraded (N -> N/2)
 
     def __post_init__(self):
         if self.n_ssds < 1 or (self.n_ssds & (self.n_ssds - 1)):
             raise ValueError(f"n_ssds must be a power of two (bucket-range "
                              f"index partitioning); got {self.n_ssds}")
+        if self.n_failed not in (0, 1):
+            raise ValueError(f"n_failed must be 0 or 1 (repartition_index "
+                             f"handles single-drive loss); "
+                             f"got {self.n_failed}")
+        if self.n_failed and self.n_ssds < 2:
+            raise ValueError("a degraded array needs n_ssds >= 2: there is "
+                             "no survivor to fold a failed drive onto")
+
+    @property
+    def n_serving(self) -> int:
+        """Drives actually serving the index: all of them, or the N/2
+        halving ``repartition_index`` folds a single-drive loss into."""
+        return self.n_ssds if self.n_failed == 0 else self.n_ssds // 2
 
 
 def mars_array_latency(w: Workload,
@@ -349,12 +370,14 @@ def mars_array_latency(w: Workload,
     counts and ``bytes_index`` — exactly the bucket-range split), with
     per-SSD flash/compute overlap.  Drives are symmetric, so the array
     compute time is one drive's time; the host adds the result-merge
-    transfer over PCIe and the per-drive dispatch overhead.
+    transfer over PCIe and the per-drive dispatch overhead.  A degraded
+    array (``n_failed``) serves with ``n_serving`` drives, each carrying
+    the doubled post-rebalance share.
     """
-    per = w.scale(1.0 / arr.n_ssds)
+    per = w.scale(1.0 / arr.n_serving)
     lat = mars_latency(per, arr.ssd)
     t_merge = (w.n_reads * arr.result_bytes_per_read) / arr.ssd.pcie_bw
-    t_orch = arr.n_ssds * arr.t_dispatch
+    t_orch = arr.n_serving * arr.t_dispatch
     total = lat["total"] + t_merge + t_orch
     return dict(total=total, per_ssd=lat["total"], merge=t_merge,
                 orchestration=t_orch, compute=lat["compute"],
@@ -367,13 +390,14 @@ def mars_array_energy(w: Workload,
     merge over PCIe.  Dynamic energy is workload-proportional, so the
     per-drive dynamic energies sum back to (almost) the single-drive
     total; static power burns on every drive for the (shorter) array
-    runtime — the energy cost of the latency win."""
-    per = w.scale(1.0 / arr.n_ssds)
+    runtime — the energy cost of the latency win.  A degraded array
+    burns static power only on the ``n_serving`` survivors."""
+    per = w.scale(1.0 / arr.n_serving)
     per_dyn = mars_energy(per, arr.ssd) - SSD_ACTIVE_W * mars_latency(
         per, arr.ssd)["total"]
-    static = arr.n_ssds * SSD_ACTIVE_W * mars_array_latency(w, arr)["total"]
+    static = arr.n_serving * SSD_ACTIVE_W * mars_array_latency(w, arr)["total"]
     merge = w.n_reads * arr.result_bytes_per_read * ENERGY["pcie_byte"]
-    return arr.n_ssds * per_dyn + static + merge
+    return arr.n_serving * per_dyn + static + merge
 
 
 def _erlang_c(c: int, a: float) -> float:
@@ -412,8 +436,18 @@ def queueing_percentiles(service: float, c: int, offered_load: float,
     requests per ``chunk_cost`` behaves like B parallel unit-cost
     servers at the same total capacity).
     """
-    if offered_load <= 0:
-        raise ValueError(f"offered_load must be > 0; got {offered_load}")
+    if not service > 0:
+        raise ValueError(f"service time must be > 0; got {service}")
+    c = int(c)
+    if c < 1:
+        raise ValueError(f"n_servers must be >= 1; got {c}")
+    if offered_load < 0:
+        raise ValueError(f"offered_load must be >= 0 (requests per unit "
+                         f"time); got {offered_load}")
+    if offered_load == 0:
+        raise ValueError("offered_load must be > 0: an idle system has no "
+                         "sojourn distribution (every percentile is just "
+                         "the service time)")
     mu = 1.0 / service
     a = offered_load / mu
     rho = a / c
@@ -442,15 +476,17 @@ def serving_latency(w: Workload, offered_load: float,
     that turns Workload *rates* into p50/p99 alongside the batch
     latencies.
 
-    Each SSD is one server of the M/D/c queue (``queueing_percentiles``);
-    service time is the per-read amortized batch latency of ONE drive
-    serving its index partition, incl. the host merge/dispatch share.
+    Each SERVING SSD is one server of the M/D/c queue
+    (``queueing_percentiles``) — a degraded array has fewer, slower-share
+    servers; service time is the per-read amortized batch latency of ONE
+    drive serving its index partition, incl. the host merge/dispatch
+    share.
     """
-    # per-read deterministic service time on one drive (its 1/N share,
-    # amortized over its reads)
+    # per-read deterministic service time on one drive (its post-rebalance
+    # share, amortized over its reads)
     batch = mars_array_latency(w, arr)
-    service = batch["total"] / max(w.n_reads, 1) * arr.n_ssds
-    out = queueing_percentiles(service, arr.n_ssds, offered_load,
+    service = batch["total"] / max(w.n_reads, 1) * arr.n_serving
+    out = queueing_percentiles(service, arr.n_serving, offered_load,
                                percentiles)
     out["n_ssds"] = out["n_servers"]
     return out

@@ -117,6 +117,9 @@ DEBUG_COUNTER_SCHEMA: Tuple[str, ...] = (
     # hits / misses / host->device paged bytes (int32, clamped; exact
     # host-side totals live on HotTileCache)
     "n_tile_hits", "n_tile_misses", "n_tile_paged_bytes",
+    # fault-tolerant paging (core/tiered.py + core/faults.py): per-chunk
+    # page-in re-reads and checksum mismatches caught before retry/raise
+    "n_tile_retries", "n_tile_corruptions",
 )
 
 

@@ -29,12 +29,20 @@ analogue over the stage engine:
     reachable only by invalid seeds, which ``match_entries`` masks; hit
     positions are packed ring-style so garbage slots never leak).
 
-Cache-traffic telemetry (hits / misses / paged bytes) rides the
-``stages.DEBUG_COUNTER_SCHEMA`` — the chunk program drops those names
-before summing, so ``CHUNK_COUNTER_SCHEMA`` and every consumer keyed on it
-stay byte-identical; host-side totals live on the cache object
-(``hits`` / ``misses`` / ``paged_bytes`` / ``hit_rate``) for the
-microbenchmark cache group.
+Cache-traffic telemetry (hits / misses / paged bytes / retries /
+corruptions) rides the ``stages.DEBUG_COUNTER_SCHEMA`` — the chunk
+program drops those names before summing, so ``CHUNK_COUNTER_SCHEMA`` and
+every consumer keyed on it stay byte-identical; host-side totals live on
+the cache object (``hits`` / ``misses`` / ``paged_bytes`` / ``hit_rate``
+/ ``retries`` / ``corruptions``) for the microbenchmark cache group.
+
+Fault tolerance: every page-in is verified against the tile's build-time
+CRC32 (``core/index.tile_checksum``).  A failed or corrupted read is
+retried with exponential backoff (accounted in virtual time,
+``vtime_penalty``) up to ``max_retries`` times; an exhausted budget
+raises a loud ``faults.TileReadError`` — a corrupted tile can never
+silently serve hits.  The seeded injection harness (``core/faults.py``)
+hooks exactly this boundary and is a no-op when absent.
 """
 from __future__ import annotations
 
@@ -45,9 +53,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import faults as faults_mod
 from repro.core import seeding, stages
 from repro.core.config import MarsConfig
-from repro.core.index import TieredIndex
+from repro.core.index import TieredIndex, tile_checksum
 
 # The pytree keys of a device tile-cache view (what the `query:tiered`
 # stage body consumes).  Shapes for a cache of n_view slots over n_tiles
@@ -56,8 +65,9 @@ from repro.core.index import TieredIndex
 #   t_bucket_start   (n_view, bl + 1) int32   per-slot local prefix offsets
 #   t_entries_packed (2, n_view, emax) int32  per-slot packed entry rows
 #   t_tile_slot      (n_tiles,) int32         tile -> slot, -1 non-resident
-#   t_cache_stats    (3,) int32               this chunk's (hits, misses,
-#                                             paged bytes) telemetry
+#   t_cache_stats    (5,) int32               this chunk's (hits, misses,
+#                                             paged bytes, page-in retries,
+#                                             checksum mismatches) telemetry
 TIERED_INDEX_KEYS = ("t_bucket_start", "t_entries_packed", "t_tile_slot",
                      "t_cache_stats")
 
@@ -135,7 +145,8 @@ def _query_tiered(state: stages.State, cfg: MarsConfig, index) -> stages.State:
     # chunk program before summing — CHUNK_COUNTER_SCHEMA is unchanged)
     s = index["t_cache_stats"]
     c = {**c, "n_tile_hits": s[0], "n_tile_misses": s[1],
-         "n_tile_paged_bytes": s[2]}
+         "n_tile_paged_bytes": s[2], "n_tile_retries": s[3],
+         "n_tile_corruptions": s[4]}
     return {**state, "q_pos": q_pos, "t_pos": t_pos, "hit_valid": hit_valid,
             "counters": {**state["counters"], **c}}
 
@@ -195,17 +206,40 @@ class HotTileCache:
 
     Telemetry (cumulative, host ints): ``hits`` / ``misses`` (tile
     touches found/not found resident), ``paged_bytes`` (host->device bytes
-    for missed tiles), ``n_chunks``; ``hit_rate`` derives.  Per-chunk
-    values ride the view's ``t_cache_stats`` into the DEBUG counters.
+    for missed tiles), ``retries`` (page-in re-reads), ``corruptions``
+    (checksum mismatches caught), ``n_chunks``; ``hit_rate`` derives.
+    Per-chunk values ride the view's ``t_cache_stats`` into the DEBUG
+    counters.
+
+    Every page-in is CRC-verified against the build-time per-tile checksum
+    and retried with exponential backoff (``backoff_base * 2**k`` virtual
+    time units, accumulated in ``vtime_penalty``) up to ``max_retries``
+    times; exhaustion raises ``faults.TileReadError`` — never a silent
+    wrong answer.  ``faults`` attaches a seeded ``core/faults.FaultPlan``
+    injection harness at exactly this boundary; a plan that injects
+    nothing (``FaultPlan.enabled`` false) is dropped entirely, so the
+    happy path is byte-identical with or without it.
     """
 
     def __init__(self, tiered: TieredIndex, n_slots: int, mesh=None,
-                 policy: str = "lru", seed: int = 0):
+                 policy: str = "lru", seed: int = 0,
+                 faults: Optional[faults_mod.FaultPlan] = None,
+                 max_retries: int = 3, backoff_base: float = 1.0):
         if n_slots < 1:
             raise ValueError(f"need at least one cache slot; got {n_slots}")
         if policy not in ("lru", "random"):
             raise ValueError(f"unknown eviction policy {policy!r}; "
                              "use 'lru' or 'random'")
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0; got {max_retries}")
+        if backoff_base < 0:
+            raise ValueError(f"backoff_base must be >= 0; "
+                             f"got {backoff_base}")
+        self.max_retries = int(max_retries)
+        self.backoff_base = float(backoff_base)
+        self._inj = (faults_mod.FaultInjector(faults)
+                     if faults is not None and faults.enabled else None)
+        self._prefetch_serial = 0
         self.tiered = tiered
         self.n_slots = min(int(n_slots), tiered.n_tiles)
         self.mesh = mesh
@@ -237,6 +271,11 @@ class HotTileCache:
         self.misses = 0
         self.paged_bytes = 0
         self.n_chunks = 0
+        self.retries = 0          # page-in re-reads (failures + mismatches)
+        self.corruptions = 0      # checksum mismatches caught at page-in
+        self.vtime_penalty = 0.0  # virtual time lost to spikes + backoff
+        self._chunk_retries = 0
+        self._chunk_corruptions = 0
 
     @property
     def hit_rate(self) -> float:
@@ -254,8 +293,15 @@ class HotTileCache:
         key = id(signals)
         if key in self._ready:
             return
+        serial = self._prefetch_serial
+        self._prefetch_serial += 1
+        if self._inj is not None:
+            self._inj.check_prefetch(serial)
+        # build the view BEFORE memoizing: a failed page-in must not leak
+        # a dangling `_keep` pin or a half-built `_ready` entry
+        view = self._prepare(signals, cfg, plan)
         self._keep[key] = signals
-        self._ready[key] = self._prepare(signals, cfg, plan)
+        self._ready[key] = view
 
     def prepare(self, signals, cfg: MarsConfig,
                 plan: stages.Plan) -> Dict[str, jnp.ndarray]:
@@ -269,6 +315,53 @@ class HotTileCache:
         return self._prepare(signals, cfg, plan)
 
     # ---------------------------------------------------------- internals
+    def _read_tile(self, t: int, attempt: int):
+        """One raw page-in attempt: contiguous int32 copies of the tile's
+        planes (the 'DMA' — copies so an injected corruption can never
+        reach the host index), routed through the fault injector when one
+        is attached.  Raises ``TransientTileError`` on an injected read
+        failure; latency spikes land in ``vtime_penalty``."""
+        ti = self.tiered
+        bstart = np.ascontiguousarray(ti.tile_bucket_start[t],
+                                      dtype=np.int32)
+        ent = np.ascontiguousarray(ti.tile_entries_packed[t],
+                                   dtype=np.int32)
+        if self._inj is not None:
+            bstart, ent, lat = self._inj.tile_read(t, attempt, bstart, ent)
+            if lat:
+                self.vtime_penalty += lat
+        return bstart, ent
+
+    def _fetch_tile(self, t: int):
+        """Page in one tile, verified: read -> CRC32 check -> (bstart, ent)
+        or bounded retry with exponential backoff (virtual-time accounted).
+        Every read failure / checksum mismatch is counted; an exhausted
+        budget raises ``TileReadError`` loudly — a corrupted tile never
+        serves hits silently."""
+        t = int(t)
+        expect = self.tiered.checksum(t)
+        last: Optional[Exception] = None
+        for attempt in range(self.max_retries + 1):
+            if attempt:
+                self.retries += 1
+                self._chunk_retries += 1
+                self.vtime_penalty += self.backoff_base * 2.0 ** (attempt - 1)
+            try:
+                bstart, ent = self._read_tile(t, attempt)
+            except faults_mod.TransientTileError as e:
+                last = e
+                continue
+            if tile_checksum(bstart, ent) == expect:
+                return bstart, ent
+            self.corruptions += 1
+            self._chunk_corruptions += 1
+            last = faults_mod.TileReadError(
+                f"checksum mismatch paging tile {t} "
+                f"(attempt {attempt}, expected {expect:#010x})")
+        raise faults_mod.TileReadError(
+            f"tile {t} page-in failed after {self.max_retries + 1} "
+            f"attempts: {last}") from last
+
     def _prepare(self, signals, cfg, plan):
         ti = self.tiered
         hist = np.asarray(
@@ -276,6 +369,8 @@ class HotTileCache:
         needed = np.nonzero(hist > 0)[0]
         self._serial += 1
         self.n_chunks += 1
+        self._chunk_retries = 0
+        self._chunk_corruptions = 0
         if needed.size <= self.n_slots:
             return self._ensure_resident(needed, hist)
         return self._overflow_view(needed, hist)
@@ -294,11 +389,11 @@ class HotTileCache:
                                          self._slot_touch[s], s))
 
     def _load_slot(self, s: int, t: int) -> None:
-        ti = self.tiered
-        self._dev_bstart = self._dev_bstart.at[s].set(
-            jnp.asarray(np.ascontiguousarray(ti.tile_bucket_start[t])))
-        self._dev_ent = self._dev_ent.at[:, s, :].set(
-            jnp.asarray(np.ascontiguousarray(ti.tile_entries_packed[t])))
+        # fetch (verify + retry) BEFORE touching device state: a failed
+        # page-in raises here and leaves every persistent slot unchanged
+        bstart, ent = self._fetch_tile(t)
+        self._dev_bstart = self._dev_bstart.at[s].set(jnp.asarray(bstart))
+        self._dev_ent = self._dev_ent.at[:, s, :].set(jnp.asarray(ent))
         self._slot_tile[s] = t
         self._slot_touch[s] = 0
 
@@ -308,7 +403,9 @@ class HotTileCache:
         self.misses += chunk_misses
         self.paged_bytes += paged
         stats = jnp.asarray([chunk_hits, chunk_misses,
-                             min(paged, np.iinfo(np.int32).max)], jnp.int32)
+                             min(paged, np.iinfo(np.int32).max),
+                             self._chunk_retries,
+                             self._chunk_corruptions], jnp.int32)
         return dict(t_bucket_start=bstart, t_entries_packed=ent,
                     t_tile_slot=self._put(jnp.asarray(tile_slot)),
                     t_cache_stats=self._put(stats))
@@ -345,8 +442,7 @@ class HotTileCache:
         ent = np.zeros((2, n_view, ti.emax), np.int32)
         tile_slot = np.full(ti.n_tiles, -1, np.int32)
         for i, t in enumerate(needed):
-            bstart[i] = ti.tile_bucket_start[t]
-            ent[:, i, :] = ti.tile_entries_packed[t]
+            bstart[i], ent[:, i, :] = self._fetch_tile(t)
             tile_slot[int(t)] = i
         resident = {int(t) for t in self._slot_tile if t >= 0}
         hits = sum(1 for t in needed if int(t) in resident)

@@ -14,6 +14,14 @@ offered load.
 (`--load` is the offered load as a fraction of the measured service
 capacity; >1 exercises the bounded-queue backpressure path.)
 
+Degraded-mode serving (EXPERIMENTS.md "Degraded-mode methodology"):
+``--fault-plan SEED`` routes the index through the tiered storage path
+with a seeded ``core/faults.FaultPlan`` injected at tile page-in
+(checksummed retry/backoff, virtual-time accounted); ``--shed`` closes
+the admission loop (SLO classes + saturation-aware shedding); and
+``--load-sweep 0.5,0.9,1.3,1.8`` serves the same trace shape at several
+offered loads, printing the shed-rate vs p50/p99 curve.
+
 The LLM token-serving twin of this launcher — batched prefill + decode
 with a KV cache — is ``repro.launch.serve``.
 """
@@ -25,18 +33,20 @@ import time
 
 import numpy as np
 
-from repro.core import (MarsConfig, Mapper, ServeDriver, build_index,
-                        ssd_model, workload)
+from repro.core import (FaultPlan, MarsConfig, Mapper, ServeDriver, SLOClass,
+                        build_index, ssd_model, workload)
 from repro.signal import datasets, simulate
 
 
 def build_trace(signals: np.ndarray, n_streams: int, reads_per_stream: int,
                 arrival_rate: float, seed: int = 0,
-                priorities=(0,)) -> list:
+                priorities=(0,), slos=None) -> list:
     """A Poisson arrival trace over ``n_streams`` streams: each stream
     submits ``reads_per_stream`` single-read requests; inter-arrival
     times are exponential with the given aggregate rate (virtual-time
-    units = chunk services)."""
+    units = chunk services).  With ``slos`` each stream is tagged with
+    the SLO class name ``slos[stream % len(slos)]`` (priority/deadline
+    come from the class)."""
     rng = np.random.default_rng(seed)
     n = n_streams * reads_per_stream
     gaps = rng.exponential(1.0 / max(arrival_rate, 1e-9), n)
@@ -46,9 +56,20 @@ def build_trace(signals: np.ndarray, n_streams: int, reads_per_stream: int,
     trace = []
     for k in range(n):
         sid = f"s{owners[k]}"
-        trace.append((float(times[k]), sid, signals[k % signals.shape[0]],
-                      int(priorities[owners[k] % len(priorities)])))
+        sig = signals[k % signals.shape[0]]
+        if slos is None:
+            trace.append((float(times[k]), sid, sig,
+                          int(priorities[owners[k] % len(priorities)])))
+        else:
+            trace.append((float(times[k]), sid, sig, None, None,
+                          slos[int(owners[k]) % len(slos)]))
     return trace
+
+
+# The two-tier serving contract the --shed path demonstrates: latency-
+# sensitive streams are never shed; bulk streams absorb the overload.
+SHED_CLASSES = (SLOClass("gold", priority=1, deadline=64.0, sheddable=False),
+                SLOClass("best_effort", priority=0))
 
 
 def main(argv=None):
@@ -76,6 +97,24 @@ def main(argv=None):
     ap.add_argument("--use-kernels", action="store_true")
     ap.add_argument("--n-ssds", type=int, default=4,
                     help="drives in the analytic multi-SSD array report")
+    ap.add_argument("--n-failed", type=int, default=0, choices=(0, 1),
+                    help="degraded analytic array: one drive lost, index "
+                         "rebalanced N -> N/2 (repartition_index)")
+    ap.add_argument("--fault-plan", type=int, default=None, metavar="SEED",
+                    help="serve through the tiered storage path with a "
+                         "seeded FaultPlan (read errors + corruption + "
+                         "latency spikes) injected at tile page-in")
+    ap.add_argument("--tiles", type=int, default=8,
+                    help="host-resident index tiles (with --fault-plan)")
+    ap.add_argument("--cache-slots", type=int, default=4,
+                    help="device tile-cache slots (with --fault-plan)")
+    ap.add_argument("--shed", action="store_true",
+                    help="closed-loop admission: SLO classes (gold / "
+                         "best_effort) + saturation-aware load shedding")
+    ap.add_argument("--shed-window", type=float, default=8.0)
+    ap.add_argument("--load-sweep", default=None, metavar="L1,L2,...",
+                    help="serve the trace shape at several offered loads "
+                         "and print the shed-rate vs p50/p99 curve")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -91,39 +130,92 @@ def main(argv=None):
           f"reads/stream={args.reads_per_stream} "
           f"index={index.n_entries} entries {time.time()-t0:.1f}s")
 
-    mapper = Mapper(index, cfg, use_kernels=args.use_kernels)
-    # offered load in reads per virtual time unit: one unit serves one
-    # chunk, i.e. `chunk` reads at capacity
-    rate = args.load * args.chunk
-    trace = build_trace(rs.signals, args.streams, args.reads_per_stream,
-                        arrival_rate=rate, seed=args.seed)
-    sd = ServeDriver(mapper, chunk=args.chunk, max_queue=args.max_queue,
-                     early_term=args.early_term)
-    t0 = time.time()
-    reports = sd.serve_trace(trace)
-    wall = time.time() - t0
+    def make_mapper():
+        if args.fault_plan is None:
+            return Mapper(index, cfg, use_kernels=args.use_kernels)
+        plan = FaultPlan(seed=args.fault_plan, p_read_error=0.02,
+                         p_corrupt=0.02, p_latency=0.05, latency_units=2.0)
+        return Mapper(index, cfg, backend="tiered", tiles=args.tiles,
+                      cache_slots=args.cache_slots, fault_plan=plan)
 
-    print(f"[serve] {n_reads} reads over {args.streams} streams in "
-          f"{wall:.2f}s wall ({n_reads/max(wall, 1e-9):.1f} reads/s, "
-          f"{args.streams/max(wall, 1e-9):.2f} streams/s); "
-          f"{sd.n_chunks} chunks, {sd.n_pad_rows} pad rows, "
-          f"virtual makespan {sd.clock:.1f}")
-    for sid in sorted(reports, key=lambda s: int(s[1:])):
-        r = reports[sid]
-        print(f"  {sid}: reads={r.n_reads} mapped={r.n_mapped} "
-              f"rejected={r.n_rejected} latency p50={r.p50_latency:.2f} "
-              f"p99={r.p99_latency:.2f} mean={r.mean_latency:.2f} "
-              f"(virtual units)")
+    slos = None
+    serve_kw = dict(chunk=args.chunk, max_queue=args.max_queue,
+                    early_term=args.early_term)
+    if args.shed:
+        serve_kw.update(shed=True, shed_window=args.shed_window,
+                        slo_classes=SHED_CLASSES)
+        slos = [c.name for c in SHED_CLASSES]
+
+    def run_once(load, verbose=True):
+        # offered load in reads per virtual time unit: one unit serves one
+        # chunk, i.e. `chunk` reads at capacity
+        mapper = make_mapper()
+        trace = build_trace(rs.signals, args.streams, args.reads_per_stream,
+                            arrival_rate=load * args.chunk, seed=args.seed,
+                            slos=slos)
+        sd = ServeDriver(mapper, **serve_kw)
+        t0 = time.time()
+        reports = sd.serve_trace(trace)
+        wall = time.time() - t0
+        if verbose:
+            print(f"[serve] {n_reads} reads over {args.streams} streams in "
+                  f"{wall:.2f}s wall ({n_reads/max(wall, 1e-9):.1f} reads/s, "
+                  f"{args.streams/max(wall, 1e-9):.2f} streams/s); "
+                  f"{sd.n_chunks} chunks, {sd.n_pad_rows} pad rows, "
+                  f"virtual makespan {sd.clock:.1f}")
+            for sid in sorted(reports, key=lambda s: int(s[1:])):
+                r = reports[sid]
+                print(f"  {sid}: reads={r.n_reads} mapped={r.n_mapped} "
+                      f"rejected={r.n_rejected} shed={r.n_shed} "
+                      f"latency p50={r.p50_latency:.2f} "
+                      f"p99={r.p99_latency:.2f} mean={r.mean_latency:.2f} "
+                      f"(virtual units)")
+            if args.shed:
+                for name, c in sorted(sd.class_report().items(),
+                                      key=lambda kv: str(kv[0])):
+                    print(f"  [class {name}] reads={c.n_reads} "
+                          f"mapped={c.n_mapped} shed={c.n_shed} "
+                          f"p50={c.p50_latency:.2f} p99={c.p99_latency:.2f}")
+            if mapper.cache is not None:
+                c = mapper.cache
+                print(f"[storage] tiles paged={c.misses} retries={c.retries} "
+                      f"corruptions healed={c.corruptions} "
+                      f"vtime lost to backoff={c.vtime_penalty:.1f}")
+        return sd, reports
+
+    if args.load_sweep:
+        loads = [float(x) for x in args.load_sweep.split(",") if x]
+        print(f"[sweep] shed-rate vs latency over loads {loads}")
+        print("  load   shed%   rejected%   p50     p99")
+        for load in loads:
+            sd, reports = run_once(load, verbose=False)
+            lat = np.asarray([l for st in sd._streams.values()
+                              for l, a in zip(st.latency, st.admitted)
+                              if a and math.isfinite(l)])
+            total = sum(r.n_reads for r in reports.values())
+            shed = sum(r.n_shed for r in reports.values())
+            rej = sum(r.n_rejected for r in reports.values())
+            p50 = float(np.percentile(lat, 50)) if lat.size else math.nan
+            p99 = float(np.percentile(lat, 99)) if lat.size else math.nan
+            print(f"  {load:5.2f}  {100*shed/max(total,1):5.1f}  "
+                  f"{100*rej/max(total,1):9.1f}  {p50:6.2f}  {p99:6.2f}")
+        return None
+
+    sd, reports = run_once(args.load)
 
     # analytic multi-SSD serving percentiles at the matching offered load
     w = workload.from_counters(sd.counters, cfg, index_bytes=index.nbytes)
     if w.n_reads:
-        arr = ssd_model.SSDArrayConfig(n_ssds=args.n_ssds)
+        arr = ssd_model.SSDArrayConfig(n_ssds=args.n_ssds,
+                                       n_failed=args.n_failed)
         batch = ssd_model.mars_array_latency(w, arr)
         cap = w.n_reads / batch["total"]          # reads/s at saturation
         sv = ssd_model.serving_latency(w, offered_load=args.load * cap,
                                        arr=arr)
-        print(f"[model] {args.n_ssds}-SSD array: batch={batch['total']*1e3:.2f}ms "
+        tag = f"{args.n_ssds}-SSD array"
+        if args.n_failed:
+            tag += f" (DEGRADED: {arr.n_serving} serving)"
+        print(f"[model] {tag}: batch={batch['total']*1e3:.2f}ms "
               f"service={sv['service']*1e6:.1f}us/read rho={sv['utilization']:.2f} "
               f"p50={sv['p50']*1e6:.1f}us p99={sv['p99']*1e6:.1f}us"
               + (" SATURATED" if sv["saturated"] else ""))

@@ -1,0 +1,485 @@
+"""Fault-tolerant storage path: injection harness, checksummed paging,
+drive-loss rebalancing, closed-loop shedding.
+
+The three bit-parity oracles of the fault-tolerance layer:
+  (a) a FaultPlan that injects NOTHING is byte-identical to no harness at
+      all — MapOutput and CHUNK_COUNTER_SCHEMA counters, batch and
+      serving;
+  (b) ``repartition_index`` after a drive loss is bit-identical to a
+      fresh ``partition_index`` at the surviving count;
+  (c) every injected corruption is either healed by the checksummed
+      retry loop (exact parity with the fault-free baseline) or raises a
+      loud ``TileReadError`` — NO silent wrong answers, asserted over a
+      seeded sweep of >= 50 plans.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (FaultPlan, InjectedPrefetchError, Mapper, MarsConfig,
+                        SLOClass, TileReadError, build_index, driver,
+                        partition_index, repartition_index,
+                        sample_fault_plans, stages)
+from repro.core.faults import FaultInjector, TransientTileError
+from repro.core.index import build_index_streaming, tier_index, tile_checksum
+from repro.core.tiered import HotTileCache
+from repro.signal import simulate
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = MarsConfig(hash_bits=12).with_mode("ms_fixed")
+    ref = simulate.make_reference(8_000, seed=5)
+    reads = simulate.sample_reads(ref, 24, signal_len=cfg.signal_len,
+                                  seed=6, junk_frac=0.25)
+    idx = build_index(ref.events_concat, ref.n_events, cfg)
+    return cfg, ref, reads, idx
+
+
+@pytest.fixture(scope="module")
+def base_out(setup):
+    cfg, _, reads, idx = setup
+    return Mapper(idx, cfg).map_signals(reads.signals, chunk=8)
+
+
+def _assert_parity(base, out):
+    np.testing.assert_array_equal(np.asarray(base.t_start),
+                                  np.asarray(out.t_start))
+    np.testing.assert_array_equal(np.asarray(base.score),
+                                  np.asarray(out.score))
+    np.testing.assert_array_equal(np.asarray(base.mapped),
+                                  np.asarray(out.mapped))
+    np.testing.assert_array_equal(np.asarray(base.n_events),
+                                  np.asarray(out.n_events))
+    assert base.counters == out.counters
+
+
+# --------------------------------------------------------------------------- #
+# Oracle (a): zero-fault plan == no harness
+# --------------------------------------------------------------------------- #
+def test_zero_fault_plan_is_disabled():
+    p = FaultPlan(seed=123)
+    assert not p.enabled
+    assert FaultPlan(seed=1, p_corrupt=0.1).enabled
+    assert FaultPlan(sticky_corrupt_tiles={3}).enabled
+    assert FaultPlan(prefetch_error_serials=[0]).enabled
+    # failed_drive alone describes a rebalancing scenario, not a tile
+    # fault — the paging path stays untouched
+    assert not FaultPlan(failed_drive=2).enabled
+
+
+def test_zero_fault_batch_parity(setup, base_out):
+    cfg, _, reads, idx = setup
+    m = Mapper(idx, cfg, backend="tiered", tiles=8, cache_slots=4,
+               fault_plan=FaultPlan(seed=9))
+    assert m.cache._inj is None                  # harness dropped entirely
+    out = m.map_signals(reads.signals, chunk=8)
+    _assert_parity(base_out, out)
+    assert m.cache.retries == 0 and m.cache.corruptions == 0
+    assert m.cache.vtime_penalty == 0.0
+
+
+def test_zero_fault_serve_parity(setup, base_out):
+    cfg, _, reads, idx = setup
+    m = Mapper(idx, cfg, backend="tiered", tiles=8, cache_slots=4,
+               fault_plan=FaultPlan(seed=9))
+    sd = m.serve(chunk=8)
+    sd.submit("s", reads.signals)
+    sd.drain()
+    out = sd.results("s")
+    np.testing.assert_array_equal(out.t_start, np.asarray(base_out.t_start))
+    np.testing.assert_array_equal(out.score, np.asarray(base_out.score))
+    np.testing.assert_array_equal(out.mapped, np.asarray(base_out.mapped))
+    assert set(sd.counters) == set(stages.CHUNK_COUNTER_SCHEMA)
+
+
+def test_fault_plan_only_on_tiered_backend(setup):
+    cfg, _, _, idx = setup
+    with pytest.raises(ValueError, match="tiered"):
+        Mapper(idx, cfg, fault_plan=FaultPlan(seed=1, p_corrupt=0.5))
+
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError, match="probability"):
+        FaultPlan(p_corrupt=1.5)
+    with pytest.raises(ValueError, match="probability"):
+        FaultPlan(p_read_error=-0.1)
+    with pytest.raises(ValueError, match="latency_units"):
+        FaultPlan(latency_units=-1.0)
+
+
+def test_keyed_draws_are_call_order_independent():
+    """The determinism contract: a draw depends only on (seed, site, key),
+    never on how many draws happened before it."""
+    plan = FaultPlan(seed=7, p_corrupt=0.5, p_read_error=0.3, p_latency=0.4)
+    ent = np.arange(2 * 8, dtype=np.int32).reshape(2, 8)
+    bs = np.arange(5, dtype=np.int32)
+
+    def attempt(inj, tile, att):
+        try:
+            b, e, lat = inj.tile_read(tile, att, bs, ent)
+            return ("ok", e.tobytes(), lat)
+        except TransientTileError:
+            return ("read_error",)
+
+    a = FaultInjector(plan)
+    fwd = {(t, k): attempt(a, t, k) for t in range(4) for k in range(3)}
+    b = FaultInjector(plan)
+    rev = {(t, k): attempt(b, t, k) for t in reversed(range(4))
+           for k in reversed(range(3))}
+    assert fwd == rev
+    # the mix of outcomes is non-trivial at these probabilities
+    assert len({v[0] for v in fwd.values()}) > 1
+
+
+# --------------------------------------------------------------------------- #
+# Oracle (c): no silent wrong answers over >= 50 seeded plans
+# --------------------------------------------------------------------------- #
+def test_sweep_no_silent_wrong_answers(setup, base_out):
+    cfg, _, reads, idx = setup
+    plans = sample_fault_plans(50, seed=0)
+    assert len(plans) == 50
+    healed = raised = 0
+    for plan in plans:
+        m = Mapper(idx, cfg, backend="tiered", tiles=8, cache_slots=4,
+                   fault_plan=plan)
+        try:
+            out = m.map_signals(reads.signals, chunk=8)
+        except TileReadError:
+            raised += 1
+            continue
+        _assert_parity(base_out, out)            # healed => exact parity
+        healed += 1
+    assert healed + raised == 50
+    assert healed > 0 and raised > 0             # both regimes exercised
+
+
+def test_sticky_corruption_always_raises(setup):
+    """A tile that corrupts on EVERY attempt exhausts the retry budget:
+    TileReadError, never a wrong answer."""
+    cfg, _, reads, idx = setup
+    m = Mapper(idx, cfg, backend="tiered", tiles=8, cache_slots=4,
+               fault_plan=FaultPlan(seed=1,
+                                    sticky_corrupt_tiles=frozenset(range(8))))
+    with pytest.raises(TileReadError):
+        m.map_signals(reads.signals, chunk=8)
+    assert m.cache.corruptions > 0
+
+
+def test_retry_heals_and_accounts_virtual_time(setup, base_out):
+    """Heavy transient read errors with a deep retry budget: results heal
+    to exact parity while retries and backoff virtual time are counted."""
+    cfg, _, reads, idx = setup
+    m = Mapper(idx, cfg, backend="tiered", tiles=8, cache_slots=4,
+               fault_plan=FaultPlan(seed=2, p_read_error=0.5),
+               cache_retries=64, cache_backoff=0.25)
+    out = m.map_signals(reads.signals, chunk=8)
+    _assert_parity(base_out, out)
+    assert m.cache.retries > 0
+    assert m.cache.vtime_penalty > 0.0
+
+
+def test_latency_spikes_only_cost_time(setup, base_out):
+    cfg, _, reads, idx = setup
+    m = Mapper(idx, cfg, backend="tiered", tiles=8, cache_slots=4,
+               fault_plan=FaultPlan(seed=3, p_latency=1.0, latency_units=4.0))
+    out = m.map_signals(reads.signals, chunk=8)
+    _assert_parity(base_out, out)
+    assert m.cache.vtime_penalty > 0.0 and m.cache.retries == 0
+
+
+def test_checksum_detects_single_bit_flip(setup):
+    cfg, _, _, idx = setup
+    ti = tier_index(idx, 8)
+    bs = np.asarray(ti.tile_bucket_start[0], np.int32)
+    ent = np.array(ti.tile_entries_packed[0], np.int32, copy=True)
+    want = ti.checksum(0)
+    assert tile_checksum(bs, ent) == want
+    ent.reshape(-1)[7] ^= 1 << 13
+    assert tile_checksum(bs, ent) != want
+
+
+def test_streaming_build_checksums_match(setup):
+    cfg, ref, _, idx = setup
+    want = tier_index(idx, 8)
+    got = build_index_streaming(ref.events_concat, ref.n_events, cfg, 8,
+                                chunk_events=1 << 9)
+    np.testing.assert_array_equal(want.tile_checksums, got.tile_checksums)
+    for t in range(8):
+        assert want.checksum(t) == got.checksum(t)
+
+
+# --------------------------------------------------------------------------- #
+# Oracle (b): drive-loss rebalancing parity
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("n_parts", [2, 4, 8])
+def test_repartition_matches_fresh_partition(setup, n_parts):
+    cfg, _, _, idx = setup
+    fresh = partition_index(idx, n_parts // 2)
+    for failed in range(n_parts):
+        parts, remap = repartition_index(idx, n_parts, failed)
+        for k in fresh:
+            np.testing.assert_array_equal(parts[k], fresh[k])
+        assert len(remap) == n_parts // 2
+        assert failed not in remap
+        for p, drive in enumerate(remap):
+            assert drive in (2 * p, 2 * p + 1)   # a survivor of the pair
+
+
+def test_repartition_validation(setup):
+    cfg, _, _, idx = setup
+    with pytest.raises(ValueError):
+        repartition_index(idx, 3, 0)             # not a power of two
+    with pytest.raises(ValueError):
+        repartition_index(idx, 1, 0)             # nothing to fold onto
+    with pytest.raises(ValueError):
+        repartition_index(idx, 4, 4)             # failed out of range
+
+
+# --------------------------------------------------------------------------- #
+# HotTileCache error paths (satellite coverage)
+# --------------------------------------------------------------------------- #
+def test_overflow_view_at_exactly_slots_plus_one(setup):
+    """needed == n_slots + 1 must overflow into a transient view padded to
+    the next power of two, leaving the persistent slots alone."""
+    cfg, _, _, idx = setup
+    ti = tier_index(idx, 8)
+    c = HotTileCache(ti, n_slots=4)
+    before = c._slot_tile.copy()
+    hist = np.zeros(8, np.int64)
+    needed = np.arange(5)
+    hist[needed] = 1
+    view = c._overflow_view(needed, hist)
+    assert view["t_bucket_start"].shape[0] == 8  # next pow2 above 5
+    np.testing.assert_array_equal(c._slot_tile, before)
+    slot_of = np.asarray(view["t_tile_slot"])
+    assert (slot_of[:5] >= 0).all() and (slot_of[5:] == -1).all()
+
+
+def test_eviction_when_all_slots_needed(setup):
+    """Two back-to-back chunks each needing ALL slots with disjoint tile
+    sets: every slot is evicted and reloaded, and the view stays exact."""
+    cfg, _, _, idx = setup
+    ti = tier_index(idx, 8)
+    c = HotTileCache(ti, n_slots=4)
+    h1 = np.zeros(8, np.int64)
+    h1[:4] = 1
+    c._serial += 1
+    c._ensure_resident(np.arange(4), h1)
+    assert sorted(int(t) for t in c._slot_tile) == [0, 1, 2, 3]
+    h2 = np.zeros(8, np.int64)
+    h2[4:] = 1
+    c._serial += 1
+    view = c._ensure_resident(np.arange(4, 8), h2)
+    assert sorted(int(t) for t in c._slot_tile) == [4, 5, 6, 7]
+    slot_of = np.asarray(view["t_tile_slot"])
+    assert (slot_of[:4] == -1).all() and (slot_of[4:] >= 0).all()
+    assert int(np.asarray(view["t_cache_stats"])[1]) == 4   # all misses
+
+
+def test_failed_pagein_leaves_persistent_slots_unchanged(setup):
+    """A page-in that exhausts its retries raises BEFORE touching device
+    state: slot map and device planes are exactly as before."""
+    cfg, _, _, idx = setup
+    ti = tier_index(idx, 8)
+    c = HotTileCache(ti, n_slots=4,
+                     faults=FaultPlan(seed=1, sticky_corrupt_tiles={5}))
+    h1 = np.zeros(8, np.int64)
+    h1[:3] = 1
+    c._serial += 1
+    c._ensure_resident(np.arange(3), h1)
+    slots_before = c._slot_tile.copy()
+    bstart_before = np.asarray(c._dev_bstart).copy()
+    ent_before = np.asarray(c._dev_ent).copy()
+    h2 = np.zeros(8, np.int64)
+    h2[5] = 1
+    c._serial += 1
+    with pytest.raises(TileReadError):
+        c._ensure_resident(np.asarray([5]), h2)
+    np.testing.assert_array_equal(c._slot_tile, slots_before)
+    np.testing.assert_array_equal(np.asarray(c._dev_bstart), bstart_before)
+    np.testing.assert_array_equal(np.asarray(c._dev_ent), ent_before)
+
+
+def test_failed_prefetch_does_not_leak_memoization(setup):
+    cfg, _, reads, idx = setup
+    m = Mapper(idx, cfg, backend="tiered", tiles=8, cache_slots=4,
+               fault_plan=FaultPlan(seed=1, prefetch_error_serials={0}))
+    sig = reads.signals[:8]
+    with pytest.raises(InjectedPrefetchError):
+        m.cache.prefetch(sig, cfg, m.plan)
+    assert not m.cache._ready and not m.cache._keep
+    # the next prefetch (serial 1) succeeds and memoizes normally
+    m.cache.prefetch(sig, cfg, m.plan)
+    assert id(sig) in m.cache._ready
+
+
+# --------------------------------------------------------------------------- #
+# driver.stream_map prefetch-exception regression (satellite)
+# --------------------------------------------------------------------------- #
+def test_stream_map_prefetch_exception_drains_inflight(setup):
+    """A prefetch-hook exception must not abandon dispatched device work:
+    every dispatched chunk is yielded, THEN the failure surfaces once."""
+    cfg, _, reads, idx = setup
+    m = Mapper(idx, cfg, backend="tiered", tiles=8, cache_slots=4)
+    calls = []
+
+    def prefetch(sig, nv):
+        calls.append(nv)
+        if len(calls) == 3:                      # prefetch of chunk 2
+            raise RuntimeError("boom at prefetch 3")
+
+    got = []
+    with pytest.raises(RuntimeError, match="boom at prefetch 3"):
+        for item in driver.stream_map(m.chunk_fn(),
+                                      driver.array_chunks(reads.signals, 8),
+                                      prefetch=prefetch):
+            got.append(item)
+    # chunks 0 and 1 were in flight / dispatched before the failure — both
+    # must have been surfaced through the iterator
+    assert [ci for ci, _, _ in got] == [0, 1]
+    base = Mapper(idx, cfg).map_signals(reads.signals[:16], chunk=8)
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(o.mapped) for _, _, o in got]),
+        np.asarray(base.mapped))
+
+
+def test_stream_map_initial_prefetch_exception(setup):
+    """Nothing in flight yet: the failure surfaces without any yields."""
+    cfg, _, reads, idx = setup
+    m = Mapper(idx, cfg, backend="tiered", tiles=8, cache_slots=4,
+               fault_plan=FaultPlan(seed=1, prefetch_error_serials={0}))
+    with pytest.raises(InjectedPrefetchError):
+        m.map_signals(reads.signals, chunk=8)
+
+
+# --------------------------------------------------------------------------- #
+# ServeDriver: non-finite rejection + SLO classes + closed-loop shedding
+# --------------------------------------------------------------------------- #
+def test_submit_rejects_nonfinite_rows(setup, base_out):
+    cfg, _, reads, idx = setup
+    m = Mapper(idx, cfg)
+    sd = m.serve(chunk=8)
+    bad = reads.signals.copy()
+    bad[3, 10] = np.nan
+    bad[7, 0] = np.inf
+    assert sd.submit("s", bad) == bad.shape[0] - 2
+    sd.drain()
+    rep = sd.report()["s"]
+    assert rep.n_nonfinite == 2 and rep.n_rejected == 2
+    out = sd.results("s")
+    good = np.isfinite(bad).all(axis=1)
+    np.testing.assert_array_equal(np.asarray(out.mapped)[good],
+                                  np.asarray(base_out.mapped)[good])
+    assert not np.asarray(out.mapped)[~good].any()
+
+
+def test_finite_submit_parity_unchanged(setup, base_out):
+    """The admission screen is invisible for finite inputs."""
+    cfg, _, reads, idx = setup
+    sd = Mapper(idx, cfg).serve(chunk=8)
+    sd.submit("s", reads.signals)
+    sd.drain()
+    out = sd.results("s")
+    np.testing.assert_array_equal(out.t_start, np.asarray(base_out.t_start))
+    np.testing.assert_array_equal(out.score, np.asarray(base_out.score))
+    np.testing.assert_array_equal(out.mapped, np.asarray(base_out.mapped))
+    rep = sd.report()["s"]
+    assert rep.n_nonfinite == 0 and rep.n_shed == 0
+
+
+def test_slo_class_defaults_and_validation(setup):
+    cfg, _, reads, idx = setup
+    classes = [SLOClass("gold", priority=3, deadline=10.0, sheddable=False)]
+    sd = Mapper(idx, cfg).serve(chunk=8, slo_classes=classes)
+    sd.submit("s", reads.signals[:2], slo="gold", t=5.0)
+    slot = sd._queue[0]
+    assert slot.priority == 3 and slot.deadline == 15.0 and not slot.sheddable
+    with pytest.raises(ValueError, match="unknown SLO class"):
+        sd.submit("s", reads.signals[:1], slo="nope")
+    with pytest.raises(ValueError):
+        SLOClass("bad", deadline=0.0)
+    sd.drain()
+
+
+def test_shedding_protects_unsheddable_class(setup, base_out):
+    """Under saturation the closed loop sheds only the sheddable class;
+    every read actually served still matches the batch mapper."""
+    cfg, _, reads, idx = setup
+    sig = reads.signals
+    classes = [SLOClass("gold", priority=2, deadline=50.0, sheddable=False),
+               SLOClass("bulk", priority=0, deadline=200.0)]
+    sd = Mapper(idx, cfg).serve(chunk=8, shed=True, shed_window=4.0,
+                                slo_classes=classes)
+    trace = []
+    for w in range(6):                            # far beyond capacity
+        trace.append((w * 0.5, f"g{w}", sig[:12], None, None, "gold"))
+        trace.append((w * 0.5, f"b{w}", sig[12:], None, None, "bulk"))
+    sd.serve_trace(trace)
+    cr = sd.class_report()
+    assert sd.n_shed > 0
+    assert cr["gold"].n_shed == 0
+    assert cr["bulk"].n_shed == sd.n_shed
+    assert math.isfinite(cr["gold"].p99_latency)
+    for w in range(6):
+        got = sd.results(f"g{w}")
+        adm = np.asarray(sd.stream(f"g{w}").admitted)
+        np.testing.assert_array_equal(np.asarray(got.mapped)[adm],
+                                      np.asarray(base_out.mapped)[:12][adm])
+
+
+def test_shed_off_is_todays_driver(setup):
+    """shed defaults off: a saturating trace is fully served (bounded only
+    by max_queue), byte-identical accounting to the pre-shed driver."""
+    cfg, _, reads, idx = setup
+    sd = Mapper(idx, cfg).serve(chunk=8)
+    trace = [(w * 0.1, f"s{w % 3}", reads.signals[w % 24])
+             for w in range(48)]
+    reports = sd.serve_trace(trace)
+    assert sd.n_shed == 0
+    assert all(r.n_shed == 0 and r.n_rejected == 0
+               for r in reports.values())
+
+
+def test_early_term_first_under_overload(setup):
+    """shed + early_term under saturation serves shortest prefixes first
+    and still resolves every admitted read."""
+    cfg, _, reads, idx = setup
+    sd = Mapper(idx, cfg).serve(chunk=8, early_term=True, shed=True,
+                                shed_window=2.0)
+    trace = [(w * 0.05, f"s{w % 4}", reads.signals[w % 24])
+             for w in range(48)]
+    reports = sd.serve_trace(trace)
+    served = sum(r.n_reads - r.n_rejected for r in reports.values())
+    lat = [r.mean_latency for r in reports.values()
+           if math.isfinite(r.mean_latency)]
+    assert served > 0 and lat
+    assert not sd._queue and not sd._inflight
+
+
+def test_serve_retry_backoff_advances_clock(setup):
+    """Virtual time lost to storage retries shows up on the serving clock
+    (and only then)."""
+    cfg, _, reads, idx = setup
+    m_ok = Mapper(idx, cfg, backend="tiered", tiles=8, cache_slots=4)
+    sd_ok = m_ok.serve(chunk=8)
+    sd_ok.submit("s", reads.signals)
+    sd_ok.drain()
+    m_fault = Mapper(idx, cfg, backend="tiered", tiles=8, cache_slots=4,
+                     fault_plan=FaultPlan(seed=2, p_read_error=0.5),
+                     cache_retries=64, cache_backoff=0.5)
+    sd = m_fault.serve(chunk=8)
+    sd.submit("s", reads.signals)
+    sd.drain()
+    assert m_fault.cache.vtime_penalty > 0.0
+    assert sd.clock > sd_ok.clock
+    out = sd.results("s")
+    np.testing.assert_array_equal(out.mapped,
+                                  np.asarray(sd_ok.results("s").mapped))
+
+
+def test_debug_counter_schema_has_fault_telemetry():
+    for k in ("n_tile_retries", "n_tile_corruptions"):
+        assert k in stages.DEBUG_COUNTER_SCHEMA
+        assert k not in stages.CHUNK_COUNTER_SCHEMA

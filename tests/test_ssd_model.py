@@ -171,6 +171,67 @@ def test_serving_latency_virtual_shape():
         S.serving_latency_virtual(8, offered_load=0.0)
 
 
+def test_queueing_validation():
+    """The shared M/D/c core rejects degenerate inputs loudly (both
+    serving wrappers inherit these guards)."""
+    with pytest.raises(ValueError, match="service time"):
+        S.queueing_percentiles(0.0, 4, 1.0)
+    with pytest.raises(ValueError, match="service time"):
+        S.queueing_percentiles(-1.0, 4, 1.0)
+    with pytest.raises(ValueError, match="n_servers"):
+        S.queueing_percentiles(1.0, 0, 1.0)
+    with pytest.raises(ValueError, match="must be >= 0"):
+        S.queueing_percentiles(1.0, 4, -0.5)
+    with pytest.raises(ValueError, match="idle system"):
+        S.queueing_percentiles(1.0, 4, 0.0)
+
+
+def test_queueing_rho_exactly_one_boundary():
+    """rho == 1.0 exactly is saturated (no steady state): percentiles and
+    mean are inf, wait probability 1; just below, everything is finite."""
+    at = S.queueing_percentiles(1.0, 4, 4.0)        # rho = 1.0 exactly
+    assert at["saturated"] and at["utilization"] == 1.0
+    assert at["mean"] == float("inf") and at["wait_prob"] == 1.0
+    assert at["p50"] == float("inf") and at["p99"] == float("inf")
+    below = S.queueing_percentiles(1.0, 4, 4.0 * (1 - 1e-6))
+    assert not below["saturated"]
+    assert below["mean"] < float("inf") and below["p99"] < float("inf")
+    virt = S.serving_latency_virtual(8, offered_load=8.0, chunk_cost=1.0)
+    assert virt["saturated"] and virt["utilization"] == 1.0
+
+
+def test_degraded_array_config():
+    arr = S.SSDArrayConfig(n_ssds=4, n_failed=1)
+    assert arr.n_serving == 2
+    assert S.SSDArrayConfig(n_ssds=4).n_serving == 4
+    with pytest.raises(ValueError, match="n_failed"):
+        S.SSDArrayConfig(n_ssds=4, n_failed=2)
+    with pytest.raises(ValueError, match="survivor"):
+        S.SSDArrayConfig(n_ssds=1, n_failed=1)
+
+
+def test_degraded_array_matches_halved_array():
+    """The analytic twin of ``repartition_index``: a degraded N-drive
+    array serves exactly like a healthy N/2-drive array (each survivor
+    carries the doubled post-rebalance share), and is strictly slower
+    than the healthy N-drive array."""
+    w = _w()
+    degraded = S.SSDArrayConfig(n_ssds=4, n_failed=1)
+    halved = S.SSDArrayConfig(n_ssds=2)
+    healthy = S.SSDArrayConfig(n_ssds=4)
+    assert (S.mars_array_latency(w, degraded)["total"]
+            == pytest.approx(S.mars_array_latency(w, halved)["total"]))
+    assert (S.mars_array_energy(w, degraded)
+            == pytest.approx(S.mars_array_energy(w, halved)))
+    assert (S.mars_array_latency(w, degraded)["total"]
+            > S.mars_array_latency(w, healthy)["total"])
+    load = 0.5 / (S.mars_array_latency(w, healthy)["total"] / w.n_reads)
+    sv_h = S.serving_latency(w, offered_load=load, arr=healthy)
+    sv_d = S.serving_latency(w, offered_load=load, arr=degraded)
+    assert sv_d["utilization"] > sv_h["utilization"]
+    assert sv_d["p99"] > sv_h["p99"]
+
+
 def test_serving_model_tracks_serve_driver_trace():
     """Calibration contract (benchmarks/calibrate_serving.py): below
     saturation the modeled p50 sojourn tracks the percentile of measured
