@@ -68,18 +68,22 @@ def mapper_signals(mapper, n_reads: int, seed: int) -> np.ndarray:
 
 def calibrate(mapper, chunk: int = 8, load_fracs: Sequence[float] =
               (0.3, 0.5, 0.7), n_reads: int = 96, chunk_cost: float = 1.0,
-              seed: int = 0):
+              seed: int = 0, model="analytic"):
     """Measured-vs-modeled rows, one per offered-load fraction of the
-    driver's chunk capacity (chunk/chunk_cost reads per virtual unit)."""
-    from repro.core import ssd_model as S
+    driver's chunk capacity (chunk/chunk_cost reads per virtual unit).
+    ``model`` selects the costmodel backend the measured trace is compared
+    against (analytic M/D/c closed form or the discrete-event serving
+    simulator)."""
+    from repro.core import costmodel
 
+    cm = costmodel.get_model(model)
     capacity = chunk / chunk_cost
     rows = []
     for f in load_fracs:
         load = f * capacity
         m = measure_trace(mapper, chunk, load, n_reads,
                           chunk_cost=chunk_cost, seed=seed)
-        model = S.serving_latency_virtual(chunk, load, chunk_cost)
+        model = cm.serving_virtual(chunk, load, chunk_cost)
         rows.append(dict(load_frac=f, offered_load=load,
                          measured_p50=m["p50"], model_p50=model["p50"],
                          measured_p99=m["p99"], model_p99=model["p99"],
@@ -101,8 +105,15 @@ def default_mapper(hash_bits: int = 12, ref_events: int = 8_000,
     return Mapper(idx, cfg)
 
 
-def main() -> None:
-    rows = calibrate(default_mapper())
+def main(argv=None) -> None:
+    import argparse
+
+    from repro.core import costmodel
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--model", default="analytic",
+                    choices=sorted(costmodel.MODELS))
+    args = ap.parse_args(argv)
+    rows = calibrate(default_mapper(), model=args.model)
     hdr = ("load  measured_p50  model_p50  ratio   measured_p99  model_p99"
            "   chunks")
     print(hdr)

@@ -2,13 +2,19 @@
 
 Each system's latency is modeled from the workload measured in its OWN
 pipeline mode (rh2 for RH2/BC, ms_float for MS-CPU_Float, ms_fixed for the
-hardware systems)."""
+hardware systems).
+
+``--model {analytic,sim}`` selects the performance backend through the
+unified ``core/costmodel.py`` interface: the closed forms (default) or the
+discrete-event in-storage simulator for the MARS path (host baselines are
+analytic either way — see costmodel docstring)."""
 from __future__ import annotations
 
+import argparse
 import statistics
 
 from benchmarks import common
-from repro.core import ssd_model
+from repro.core import costmodel, ssd_model
 from repro.signal import datasets
 
 MODE_FOR = {"BC": "rh2", "RH2": "rh2", "MS-CPU_Float": "ms_float",
@@ -20,20 +26,21 @@ PAPER_AVG = {"MARS/RH2": 28.0, "MARS/BC": 93.0, "MARS/GenPIP": 40.0,
              "MARS/MS-EXT": 3.1, "MARS/MS-SIMDRAM": 21.4}
 
 
-def results():
+def results(model="analytic"):
+    m = costmodel.get_model(model)
     rates = common.calibrated_host()
     out = {}
     for ds in datasets.DATASETS:
         row = {}
         for system in ssd_model.SYSTEMS:
             w = common.workload_for(ds, MODE_FOR[system])
-            row[system] = ssd_model.system_latency_energy(system, w, rates)
+            row[system] = m.system_latency_energy(system, w, rates)
         out[ds] = row
     return out
 
 
-def run(emit) -> None:
-    res = results()
+def run(emit, model="analytic") -> None:
+    res = results(model)
     ratios = {k: [] for k in PAPER_AVG}
     for ds, row in res.items():
         rh2 = row["RH2"]["total"]
@@ -53,8 +60,12 @@ def run(emit) -> None:
             f"ours={statistics.mean(vals):.1f}x;paper={PAPER_AVG[k]:.1f}x"))
 
 
-def main() -> None:
-    run(print)
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--model", default="analytic",
+                    choices=sorted(costmodel.MODELS))
+    args = ap.parse_args(argv)
+    run(print, model=args.model)
 
 
 if __name__ == "__main__":

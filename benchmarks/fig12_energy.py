@@ -1,19 +1,23 @@
-"""Paper Fig. 12: energy reduction of each system over RH2."""
+"""Paper Fig. 12: energy reduction of each system over RH2.
+
+``--model {analytic,sim}`` selects the costmodel backend (sim charges
+static power over the simulated runtime; dynamic energies are shared)."""
 from __future__ import annotations
 
+import argparse
 import statistics
 
 from benchmarks import common
 from benchmarks.fig11_speedup import MODE_FOR, results
-from repro.core import ssd_model
+from repro.core import costmodel, ssd_model
 from repro.signal import datasets
 
 PAPER_AVG = {"MARS/RH2": 79.4, "MARS/BC": 427.0, "MARS/GenPIP": 72.0,
              "MS-EXT/RH2": 22.3}
 
 
-def run(emit) -> None:
-    res = results()
+def run(emit, model="analytic") -> None:
+    res = results(model)
     acc = {k: [] for k in PAPER_AVG}
     for ds, row in res.items():
         rh2 = row["RH2"]["energy"]
@@ -30,8 +34,12 @@ def run(emit) -> None:
             f"ours={statistics.mean(vals):.1f}x;paper={PAPER_AVG[k]:.1f}x"))
 
 
-def main() -> None:
-    run(print)
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--model", default="analytic",
+                    choices=sorted(costmodel.MODELS))
+    args = ap.parse_args(argv)
+    run(print, model=args.model)
 
 
 if __name__ == "__main__":

@@ -1,16 +1,23 @@
 """Paper Fig. 13: MARS runtime sensitivity to SSD-internal DRAM size
-(2/4/8 GB).  Paper: ~1.70x average speedup per doubling."""
+(2/4/8 GB).  Paper: ~1.70x average speedup per doubling.
+
+``--model {analytic,sim}`` routes the sweep through the unified
+``core/costmodel.py`` interface (closed forms vs the discrete-event
+in-storage simulator)."""
 from __future__ import annotations
 
+import argparse
+
 from benchmarks import common
-from repro.core import ssd_model
+from repro.core import costmodel
 from repro.signal import datasets
 
 
-def run(emit) -> None:
+def run(emit, model="analytic") -> None:
+    m = costmodel.get_model(model)
     for ds in datasets.DATASETS:
         w = common.workload_for(ds, "ms_fixed")
-        sens = ssd_model.dram_size_sensitivity(w)
+        sens = m.dram_sensitivity(w)
         t2, t4, t8 = (sens[2 << 30], sens[4 << 30], sens[8 << 30])
         emit(common.csv_line(
             f"fig13/{ds}", t4 * 1e6,
@@ -18,8 +25,12 @@ def run(emit) -> None:
             f"speedup_2to4={t2/t4:.2f};4to8={t4/t8:.2f};paper_avg=1.70"))
 
 
-def main() -> None:
-    run(print)
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--model", default="analytic",
+                    choices=sorted(costmodel.MODELS))
+    args = ap.parse_args(argv)
+    run(print, model=args.model)
 
 
 if __name__ == "__main__":

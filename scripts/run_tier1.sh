@@ -20,6 +20,12 @@
 #                                   # (scripts/fault_sweep.py): tile
 #                                   # corruption x drive loss x overload,
 #                                   # deterministic from its seed
+#   scripts/run_tier1.sh --sim      # + the cost-model agreement gate
+#                                   # (scripts/bench_sim.py --check): the
+#                                   # discrete-event simulator must match
+#                                   # the analytic closed forms <1% on
+#                                   # degenerate configs and reproduce the
+#                                   # committed BENCH_sim.json values
 #   scripts/run_tier1.sh tests/test_pipeline.py   # extra pytest args pass through
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -37,13 +43,15 @@ MARKER=(-m "not slow")
 BENCH=0
 CI=0
 FAULTS=0
+SIM=0
 while [[ "${1:-}" == "--all" || "${1:-}" == "--bench" || "${1:-}" == "--ci" \
-         || "${1:-}" == "--faults" ]]; do
+         || "${1:-}" == "--faults" || "${1:-}" == "--sim" ]]; do
     case "$1" in
         --all)    MARKER=() ;;
         --bench)  BENCH=1 ;;
         --ci)     CI=1 ;;
         --faults) FAULTS=1 ;;
+        --sim)    SIM=1 ;;
     esac
     shift
 done
@@ -54,10 +62,10 @@ if [[ "$CI" == 1 ]]; then
     # reproducible), and the committed bench baseline must match the tree.
     export JAX_PLATFORMS=cpu
     export PYTHONUNBUFFERED=1
-    if ! git diff --quiet HEAD -- BENCH_pipeline.json; then
-        echo "ERROR: uncommitted BENCH_pipeline.json drift — commit the" >&2
-        echo "re-measured baseline or restore the committed one:" >&2
-        git --no-pager diff --stat HEAD -- BENCH_pipeline.json >&2
+    if ! git diff --quiet HEAD -- BENCH_pipeline.json BENCH_sim.json; then
+        echo "ERROR: uncommitted BENCH_pipeline.json/BENCH_sim.json drift —" >&2
+        echo "commit the re-measured baseline or restore the committed one:" >&2
+        git --no-pager diff --stat HEAD -- BENCH_pipeline.json BENCH_sim.json >&2
         exit 1
     fi
 fi
@@ -79,4 +87,12 @@ if [[ "$FAULTS" == 1 ]]; then
     # degraded-mode gate: tile corruption x drive loss x overload, seeded
     # so a red run reproduces exactly (scripts/fault_sweep.py --seed N)
     python scripts/fault_sweep.py
+fi
+
+if [[ "$SIM" == 1 ]]; then
+    # cost-model agreement gate: the discrete-event simulator must stay
+    # within 1% of the analytic closed forms on degenerate configs and
+    # reproduce the committed BENCH_sim.json record (pinned workloads +
+    # seeded traces => fully deterministic, no tolerance for drift)
+    python scripts/bench_sim.py --check
 fi

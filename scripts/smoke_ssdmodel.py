@@ -1,6 +1,14 @@
+"""Smoke the Workload->cost path end to end: map a small dataset, scale
+its measured counters to paper magnitude, and print the full system table
+through the unified ``core/costmodel.py`` interface for BOTH registered
+backends (analytic closed forms and the discrete-event simulator), plus
+the sim-vs-analytic agreement on the MARS path.
+
+    PYTHONPATH=src python scripts/smoke_ssdmodel.py
+"""
 import numpy as np
 from repro.core import MarsConfig, build_index, Mapper
-from repro.core import ssd_model, workload
+from repro.core import costmodel, ssd_model, workload
 from repro.signal import datasets, simulate
 
 spec = datasets.DATASETS["D2"]
@@ -11,13 +19,35 @@ out = Mapper(idx, cfg).map_signals(reads.signals, chunk=64)
 w = workload.from_counters(out.counters, cfg, idx.nbytes)
 # scale to paper dataset magnitude
 w = w.scale(spec.scale_factor)
-res = {}
-for s in ssd_model.SYSTEMS:
-    res[s] = ssd_model.system_latency_energy(s, w)
-rh2 = res["RH2"]
-print(f"{'system':14s} {'total_s':>10s} {'speedup_vs_RH2':>15s} {'energy_red':>11s}")
-for s, r in res.items():
-    print(f"{s:14s} {r['total']:10.2f} {rh2['total']/r['total']:15.1f} {rh2['energy']/r['energy']:11.1f}")
+
+for name in sorted(costmodel.MODELS):
+    m = costmodel.get_model(name)
+    res = {s: m.system_latency_energy(s, w) for s in ssd_model.SYSTEMS}
+    rh2 = res["RH2"]
+    print(f"--- cost model: {m.name} ---")
+    print(f"{'system':14s} {'total_s':>10s} {'speedup_vs_RH2':>15s} {'energy_red':>11s}")
+    for s, r in res.items():
+        print(f"{s:14s} {r['total']:10.2f} {rh2['total']/r['total']:15.1f} {rh2['energy']/r['energy']:11.1f}")
+    if m.name == "analytic":
+        ana = res
+    print()
+
+# the two backends must agree on the MARS path (degenerate configs <1%;
+# the default contended config stays close because flash/compute overlap
+# dominates both)
+mars_a = ana["MARS"]["total"]
+mars_s = costmodel.get_model("sim").system_latency_energy("MARS", w)["total"]
+rel = abs(mars_s - mars_a) / mars_a
+print(f"MARS total: analytic={mars_a:.3f}s sim={mars_s:.3f}s "
+      f"(rel err {100 * rel:.2f}%)")
+assert rel < 0.05, f"sim diverged from analytic by {100 * rel:.1f}%"
+
+# serving twins agree below saturation
+sv_a = costmodel.get_model("analytic").serving_virtual(8, 4.0)
+sv_s = costmodel.get_model("sim").serving_virtual(8, 4.0)
+print(f"serving p50: analytic={sv_a['p50']:.2f} sim={sv_s['p50']:.2f}")
+
 print("\npaper targets: MARS vs RH2 28x (energy 180x); vs BC 93x (427x); vs GenPIP 40x (72x); vs MS-EXT 3.1x; vs MS-SIMDRAM latency 21.4x faster, energy 3.5x worse")
-m, bc, gp, ext, sd = res["MARS"], res["BC"], res["GenPIP"], res["MS-EXT"], res["MS-SIMDRAM"]
-print(f"ours: MARS vs RH2 {rh2['total']/m['total']:.1f}x ({rh2['energy']/m['energy']:.0f}x) | vs BC {bc['total']/m['total']:.1f}x ({bc['energy']/m['energy']:.0f}x) | vs GenPIP {gp['total']/m['total']:.1f}x ({gp['energy']/m['energy']:.0f}x) | vs EXT {ext['total']/m['total']:.1f}x | vs SIMDRAM {sd['total']/m['total']:.1f}x")
+rh2, m_, bc, gp, ext, sd = (ana["RH2"], ana["MARS"], ana["BC"],
+                            ana["GenPIP"], ana["MS-EXT"], ana["MS-SIMDRAM"])
+print(f"ours: MARS vs RH2 {rh2['total']/m_['total']:.1f}x ({rh2['energy']/m_['energy']:.0f}x) | vs BC {bc['total']/m_['total']:.1f}x ({bc['energy']/m_['energy']:.0f}x) | vs GenPIP {gp['total']/m_['total']:.1f}x ({gp['energy']/m_['energy']:.0f}x) | vs EXT {ext['total']/m_['total']:.1f}x | vs SIMDRAM {sd['total']/m_['total']:.1f}x")

@@ -12,8 +12,9 @@ Public API:
     FaultPlan             seeded storage-fault injection harness
     repartition_index     online drive-loss rebalancing (N -> N/2 fold)
     score_accuracy        P/R/F1 vs. ground truth
+    costmodel             unified Workload->cost interface (analytic | sim)
 """
-from repro.core import driver, stages
+from repro.core import costmodel, driver, stages
 from repro.core.server import (ClassReport, ServeDriver, SLOClass,
                                StreamReport)
 from repro.core.config import (DEFAULT, MODE_MS_FIXED, MODE_MS_FLOAT,
@@ -31,7 +32,8 @@ __all__ = [
     "MarsConfig", "Index", "build_index", "index_arrays",
     "index_arrays_unpacked", "partition_index", "repartition_index",
     "MapOutput", "Mapper", "map_chunk", "map_chunk_sharded", "map_read",
-    "driver", "stages", "score_accuracy", "ServeDriver", "StreamReport",
+    "costmodel", "driver", "stages", "score_accuracy", "ServeDriver",
+    "StreamReport",
     "SLOClass", "ClassReport", "FaultPlan", "TileReadError",
     "InjectedPrefetchError", "sample_fault_plans",
 ]

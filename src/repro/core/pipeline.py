@@ -98,22 +98,35 @@ def cheap_phase(signals: jnp.ndarray, index: Dict[str, jnp.ndarray],
     if prims is None:
         return cheap_phase_vmap(signals, index, cfg, plan)
 
-    if prims.detector is not None:
-        means, n_ev = prims.detector(signals)
+    if "t_pre_keys" in index:
+        # the tiered traffic pre-pass already ran the plan's own
+        # detect/quantize/seed over this exact chunk (core/tiered.py,
+        # PREPASS_KEYS) — consume its outputs instead of recomputing.
+        # Bit-identical by construction: same stages, same plan, same
+        # padded signals.
+        n_ev = index["t_pre_nev"]
+        keys = index["t_pre_keys"]
+        seed_valid = index["t_pre_valid"]
+        counters = {"n_events": n_ev}
     else:
-        def detect_one(signal):
-            st = stages.execute_stages({"signal": signal, "counters": {}},
-                                       index, cfg, plan, ("detect",))
-            return st["events"], st["n_events"]
-        means, n_ev = jax.vmap(detect_one)(signals)
-    counters = {"n_events": n_ev}
+        if prims.detector is not None:
+            means, n_ev = prims.detector(signals)
+        else:
+            def detect_one(signal):
+                st = stages.execute_stages({"signal": signal,
+                                            "counters": {}},
+                                           index, cfg, plan, ("detect",))
+                return st["events"], st["n_events"]
+            means, n_ev = jax.vmap(detect_one)(signals)
+        counters = {"n_events": n_ev}
 
-    def quant_seed(ev, n):
-        st = stages.execute_stages({"events": ev, "n_events": n,
-                                    "counters": {}},
-                                   index, cfg, plan, ("quantize", "seed"))
-        return st["keys"], st["seed_valid"]
-    keys, seed_valid = jax.vmap(quant_seed)(means, n_ev)
+        def quant_seed(ev, n):
+            st = stages.execute_stages({"events": ev, "n_events": n,
+                                        "counters": {}},
+                                       index, cfg, plan,
+                                       ("quantize", "seed"))
+            return st["keys"], st["seed_valid"]
+        keys, seed_valid = jax.vmap(quant_seed)(means, n_ev)
 
     if prims.query_fn is not None:
         def query_one(k, v):
@@ -417,7 +430,10 @@ class Mapper:
     order; the cache object (``self.cache``) carries hit/miss/paged-bytes
     telemetry.  ``index`` may also be a pre-built ``TieredIndex`` (e.g.
     from the streaming ``build_index_streaming``), in which case ``tiles``
-    is ignored.
+    is ignored.  ``reuse_prepass`` (default) forwards the traffic
+    pre-pass's detect/quantize/seed outputs to the main pass so that work
+    runs once per chunk, not twice — bit-identical to recomputing, and
+    forced off under a mesh (the sharded program shards per-read planes).
 
     ``fault_plan`` (tiered backend only) attaches a seeded
     ``core/faults.FaultPlan`` injection harness to the cache's page-in
@@ -431,7 +447,7 @@ class Mapper:
                  mesh=None, tiles: int = 8, cache_slots: int = 4,
                  cache_policy: str = "lru", cache_seed: int = 0,
                  fault_plan=None, cache_retries: int = 3,
-                 cache_backoff: float = 1.0):
+                 cache_backoff: float = 1.0, reuse_prepass: bool = True):
         self.index = index
         self.cfg = cfg or index.cfg
         self.backend = backend or (
@@ -455,7 +471,8 @@ class Mapper:
                                       policy=cache_policy, seed=cache_seed,
                                       faults=fault_plan,
                                       max_retries=cache_retries,
-                                      backoff_base=cache_backoff)
+                                      backoff_base=cache_backoff,
+                                      reuse_prepass=reuse_prepass)
             self.arrays = None
         elif stages.plan_index_kind(self.plan) == "partitioned":
             from repro.core.index import INDEX_AXIS, partition_index

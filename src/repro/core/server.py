@@ -53,15 +53,27 @@ retry/backoff (``HotTileCache.vtime_penalty``) is folded in as it
 accrues.  Wall-clock throughput is measured separately by the caller
 (benchmarks/microbench.py, launch/serve_rsga.py).
 
-Overload (the closed loop): with ``shed=True`` the driver feeds its own
-trailing offered load into the analytic serving model
-(``ssd_model.serving_latency_virtual``) and, while the model reports
-``saturated``, sheds the least-worthy sheddable read (lowest priority,
-then latest deadline, then newest) per admission and — with
-``early_term`` — packs the SHORTEST prefix stage first so slots free as
-early as possible.  ``SLOClass`` tags reads with per-class priority /
-relative-deadline defaults and a shed exemption; ``class_report()``
-aggregates latency percentiles per class.
+Overload (the closed loop): with ``shed=True`` the driver feeds its
+overload evidence into the configured ``CostModel``
+(``core/costmodel.py``, ``cost_model="analytic"`` by default) through
+``shed_signal``: the trailing offered load (the queueing model's
+no-steady-state check) AND the *measured* per-read queue delays at
+dispatch — the second term trips on effective-capacity loss the offered
+load cannot see, e.g. storage-path retry/backoff stretching the virtual
+clock.  While the signal holds, the driver sheds the least-worthy
+sheddable read (lowest priority, then latest deadline, then newest) per
+admission and — with ``early_term`` — packs the SHORTEST prefix stage
+first so slots free as early as possible.  ``SLOClass`` tags reads with
+per-class priority / relative-deadline defaults and a shed exemption;
+``class_report()`` aggregates latency percentiles per class.
+
+Trace: the driver records a replayable chunk-event trace on its virtual
+clock (``self.events``): ``("arrival", t, stream, n)`` at submission,
+``("dispatch", t, ci, stage, n_valid, stage_frac)`` when a chunk is
+packed, ``("complete", t, ci, n_valid)`` when it routes.  The trace is
+the input format of the serving simulator
+(``core/sim/serve_sim.replay_chunk_trace``); recording is pure
+observation — outputs are byte-identical with or without consumers.
 """
 from __future__ import annotations
 
@@ -72,7 +84,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import driver, ssd_model
+from repro.core import costmodel, driver, ssd_model
 
 
 @dataclasses.dataclass(frozen=True)
@@ -208,15 +220,22 @@ class ServeDriver:
     slo_classes:  ``SLOClass`` definitions reads can be submitted under
                   (per-class priority/deadline defaults + shed exemption
                   + ``class_report()`` accounting).
-    shed:         close the loop: while the analytic serving model
-                  (``ssd_model.serving_latency_virtual`` at the trailing
-                  offered load) reports ``saturated``, shed the
-                  least-worthy sheddable read per admission and (with
-                  early_term) pack shortest-prefix chunks first.  Off by
-                  default — a shed-free driver is bit-identical to the
-                  pre-shed ServeDriver.
+    shed:         close the loop: while the configured cost model's
+                  ``shed_signal`` (trailing offered load + measured
+                  queue delays) reports overload, shed the least-worthy
+                  sheddable read per admission and (with early_term)
+                  pack shortest-prefix chunks first.  Off by default —
+                  a shed-free driver is bit-identical to the pre-shed
+                  ServeDriver.
     shed_window:  trailing virtual-time window the offered load is
                   measured over.
+    cost_model:   the ``core/costmodel.py`` backend the shed controller
+                  consults ("analytic" / "sim", or a CostModel
+                  instance).
+    shed_delay_limit: measured-delay trip point, in chunk services: the
+                  signal also fires when the recent mean per-read queue
+                  delay at dispatch exceeds this many ``chunk_cost``
+                  units (catching capacity loss offered load misses).
     """
 
     def __init__(self, mapper, chunk: int = 64, max_queue: int = 4096,
@@ -225,7 +244,9 @@ class ServeDriver:
                  min_score: float = 8.0, chunk_cost: float = 1.0,
                  drop_expired: bool = False,
                  slo_classes: Optional[Sequence[SLOClass]] = None,
-                 shed: bool = False, shed_window: float = 8.0):
+                 shed: bool = False, shed_window: float = 8.0,
+                 cost_model="analytic",
+                 shed_delay_limit: float = costmodel.SHED_DELAY_LIMIT):
         self.mapper = mapper
         self.cfg = mapper.cfg
         self.chunk = int(chunk)
@@ -241,6 +262,11 @@ class ServeDriver:
             raise ValueError(f"shed_window must be > 0 virtual time units; "
                              f"got {shed_window}")
         self.shed_window = float(shed_window)
+        self.cost_model = costmodel.get_model(cost_model)
+        if shed_delay_limit <= 0:
+            raise ValueError(f"shed_delay_limit must be > 0 chunk services; "
+                             f"got {shed_delay_limit}")
+        self.shed_delay_limit = float(shed_delay_limit)
         # virtual time the tiered storage path loses to page-in
         # retry/backoff is folded into the serving clock as it accrues
         # (zero on the happy path -> parity intact)
@@ -283,6 +309,12 @@ class ServeDriver:
         self._seq = 0
         self._admit_times: collections.deque = collections.deque()
         self._shed_by_class: Dict[Optional[str], int] = {}
+        # the replayable chunk-event trace (arrival/dispatch/complete in
+        # virtual time) — the serving simulator's input format
+        self.events: List[Tuple] = []
+        # measured per-read queue delays at dispatch, trailing window —
+        # the shed controller's second (capacity-loss) overload signal
+        self._queue_delays: collections.deque = collections.deque(maxlen=64)
 
     # ------------------------------------------------------------------ #
     # Admission (bounded queue, priority-aware backpressure)
@@ -321,6 +353,7 @@ class ServeDriver:
                                  f"{sorted(self.slo_classes)}")
         t = self.clock if t is None else float(t)
         self.clock = max(self.clock, t)
+        self.events.append(("arrival", t, stream_id, int(signals.shape[0])))
         prio = int(priority) if priority is not None else (
             cls.priority if cls else 0)
         dl = float(deadline) if deadline is not None else (
@@ -355,18 +388,23 @@ class ServeDriver:
                                       in self._inflight.values())
 
     def _saturated(self) -> bool:
-        """The closed loop's overload signal: trailing offered load (reads
-        per virtual time over ``shed_window``) fed to the analytic serving
-        model; True when it reports no steady state at this chunk
-        capacity."""
+        """The closed loop's overload signal, via the cost model's
+        ``shed_signal``: trailing offered load (reads per virtual time
+        over ``shed_window``, the queueing model's no-steady-state check)
+        OR the measured recent per-read queue delays at dispatch tripping
+        ``shed_delay_limit`` chunk services — the latter catches
+        effective-capacity loss (storage retry/backoff stretching the
+        clock) that offered load alone cannot see."""
         horizon = self.clock - self.shed_window
         while self._admit_times and self._admit_times[0] < horizon:
             self._admit_times.popleft()
-        if not self._admit_times:
+        if not self._admit_times and not self._queue_delays:
             return False
         load = len(self._admit_times) / self.shed_window
-        return bool(ssd_model.serving_latency_virtual(
-            self.chunk, load, self.chunk_cost)["saturated"])
+        return bool(self.cost_model.shed_signal(
+            self.chunk, self.chunk_cost, load,
+            tuple(self._queue_delays),
+            delay_limit=self.shed_delay_limit))
 
     def _admit(self, slot: _Slot) -> bool:
         if self.shed and self._saturated():
@@ -446,6 +484,13 @@ class ServeDriver:
         ci = self.n_chunks
         self.n_chunks += 1
         self.n_pad_rows += self.chunk - len(take)
+        # measured queue delay: how long each packed read waited between
+        # admission and this dispatch (pre-advance clock) — the shed
+        # controller's capacity-loss evidence
+        for s in take:
+            self._queue_delays.append(self.clock - s.t_arrive)
+        self.events.append(("dispatch", self.clock, ci, stage, len(take),
+                            L / self.stages[-1]))
         self.clock += self.chunk_cost * L / self.stages[-1]
         # completion time is fixed at dispatch: stream_map's double buffer
         # routes chunk i only after pulling chunk i+1, so reading the live
@@ -479,6 +524,7 @@ class ServeDriver:
     def _route(self, ci: int, n_valid: int, out) -> None:
         stage, slots, done_t = self._inflight.pop(ci)
         assert n_valid == len(slots), (ci, n_valid, len(slots))
+        self.events.append(("complete", done_t, ci, n_valid))
         for k, v in out.counters.items():
             self.counters[k] = self.counters.get(k, 0) + int(v)
         last = stage == len(self.stages) - 1

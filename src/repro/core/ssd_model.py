@@ -15,6 +15,13 @@ Two calibration domains:
   * host software (RH2 / MS-CPU / minimap2 side) — component rates fitted
     against the paper's own totals (Table 4 + Fig. 11 profile) and Fig. 5
     stage fractions; see benchmarks/common.calibrated_host().
+
+This module is the ANALYTIC backend of the ``core/costmodel.py``
+Workload->cost interface.  The closed forms here stay the calibration
+oracle; the event-driven twin (``core/sim/``) plays the same Workload
+through an explicit machine (channels x dies, PNM units, internal DRAM)
+and must agree with these formulas to <1% on degenerate no-contention
+configs (tests/test_sim.py, scripts/bench_sim.py).
 """
 from __future__ import annotations
 
@@ -167,6 +174,7 @@ def mars_stage_times(w: Workload, ssd: SSDConfig) -> Dict[str, float]:
     t_flash = _flash_read_time(w.bytes_raw + w.bytes_index, ssd)
     t_dram = w.bytes_intermediate / ssd.dram_bw
     return dict(flash=t_flash, event_detection=t_ed, seeding=t_hash + t_query,
+                seeding_hash=t_hash, seeding_query=t_query,
                 filters=t_filters, sorting=t_sort, chaining_dp=t_dp,
                 dram_move=t_dram)
 

@@ -71,6 +71,15 @@ from repro.core.index import TieredIndex, tile_checksum
 TIERED_INDEX_KEYS = ("t_bucket_start", "t_entries_packed", "t_tile_slot",
                      "t_cache_stats")
 
+# Optional view planes carrying the traffic pre-pass's detect->quantize->
+# seed outputs forward to the main pass (HotTileCache(reuse_prepass=True),
+# the default off the sharded path): the chunk program consumes them
+# instead of recomputing the cheap prefix on the host's critical path.
+#
+#   t_pre_keys  (R, E) uint32   seed keys        t_pre_valid (R, E) bool
+#   t_pre_nev   (R,)   int32    per-read event counts
+PREPASS_KEYS = ("t_pre_keys", "t_pre_valid", "t_pre_nev")
+
 
 # --------------------------------------------------------------------------- #
 # The `query:tiered` stage backend
@@ -173,12 +182,15 @@ def _prepass_fn(cfg: MarsConfig, plan: stages.Plan, n_tiles: int):
         def one(signal):
             st = stages.execute_stages({"signal": signal, "counters": {}},
                                        {}, cfg, plan, subset)
-            return st["keys"], st["seed_valid"]
-        keys, valid = jax.vmap(one)(signals)
+            return st["keys"], st["seed_valid"], st["n_events"]
+        keys, valid, n_ev = jax.vmap(one)(signals)
         tile = ((keys & jnp.uint32(cfg.n_buckets - 1)).astype(jnp.int32)
                 >> tile_log)
-        return jnp.zeros((n_tiles,), jnp.int32).at[tile].add(
+        hist = jnp.zeros((n_tiles,), jnp.int32).at[tile].add(
             valid.astype(jnp.int32), mode="drop")
+        # the probe's detect/quantize/seed outputs ride along so the main
+        # pass can reuse them instead of recomputing (PREPASS_KEYS)
+        return hist, keys, valid, n_ev.astype(jnp.int32)
     return jax.jit(fn)
 
 
@@ -224,7 +236,8 @@ class HotTileCache:
     def __init__(self, tiered: TieredIndex, n_slots: int, mesh=None,
                  policy: str = "lru", seed: int = 0,
                  faults: Optional[faults_mod.FaultPlan] = None,
-                 max_retries: int = 3, backoff_base: float = 1.0):
+                 max_retries: int = 3, backoff_base: float = 1.0,
+                 reuse_prepass: bool = True):
         if n_slots < 1:
             raise ValueError(f"need at least one cache slot; got {n_slots}")
         if policy not in ("lru", "random"):
@@ -243,6 +256,11 @@ class HotTileCache:
         self.tiered = tiered
         self.n_slots = min(int(n_slots), tiered.n_tiles)
         self.mesh = mesh
+        # the pre-pass's detect/quantize/seed outputs can only feed the
+        # main pass off the sharded path: the sharded chunk program's
+        # in_specs shard per-read planes, the replicated index dict can't
+        # carry them
+        self.reuse_prepass = bool(reuse_prepass) and mesh is None
         self.policy = policy
         self._rng = np.random.default_rng(seed)
         self._rep = None
@@ -364,16 +382,25 @@ class HotTileCache:
 
     def _prepare(self, signals, cfg, plan):
         ti = self.tiered
-        hist = np.asarray(
-            _prepass_fn(cfg, plan, ti.n_tiles)(jnp.asarray(signals)))
+        hist_d, keys, valid, n_ev = _prepass_fn(cfg, plan, ti.n_tiles)(
+            jnp.asarray(signals))
+        hist = np.asarray(hist_d)
         needed = np.nonzero(hist > 0)[0]
         self._serial += 1
         self.n_chunks += 1
         self._chunk_retries = 0
         self._chunk_corruptions = 0
         if needed.size <= self.n_slots:
-            return self._ensure_resident(needed, hist)
-        return self._overflow_view(needed, hist)
+            view = self._ensure_resident(needed, hist)
+        else:
+            view = self._overflow_view(needed, hist)
+        if self.reuse_prepass:
+            # hand the probe's outputs to the chunk program (PREPASS_KEYS):
+            # bit-identical to the cheap phase it would recompute, since
+            # both run the plan's own detect/quantize/seed stages
+            view = dict(view, t_pre_keys=keys, t_pre_valid=valid,
+                        t_pre_nev=n_ev)
+        return view
 
     def _victim(self, needed: set) -> int:
         """A slot whose tile is not needed this chunk; empty slots first,

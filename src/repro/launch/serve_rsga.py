@@ -34,7 +34,7 @@ import time
 import numpy as np
 
 from repro.core import (FaultPlan, MarsConfig, Mapper, ServeDriver, SLOClass,
-                        build_index, ssd_model, workload)
+                        build_index, costmodel, ssd_model, workload)
 from repro.signal import datasets, simulate
 
 
@@ -95,8 +95,13 @@ def main(argv=None):
                     help="realtime prefix ladder: confident early reads "
                          "free their slot before full length")
     ap.add_argument("--use-kernels", action="store_true")
+    ap.add_argument("--model", default="analytic",
+                    choices=sorted(costmodel.MODELS),
+                    help="performance backend for the array report and the "
+                         "shed controller (core/costmodel.py): closed "
+                         "forms or the discrete-event in-storage simulator")
     ap.add_argument("--n-ssds", type=int, default=4,
-                    help="drives in the analytic multi-SSD array report")
+                    help="drives in the multi-SSD array report")
     ap.add_argument("--n-failed", type=int, default=0, choices=(0, 1),
                     help="degraded analytic array: one drive lost, index "
                          "rebalanced N -> N/2 (repartition_index)")
@@ -140,7 +145,7 @@ def main(argv=None):
 
     slos = None
     serve_kw = dict(chunk=args.chunk, max_queue=args.max_queue,
-                    early_term=args.early_term)
+                    early_term=args.early_term, cost_model=args.model)
     if args.shed:
         serve_kw.update(shed=True, shed_window=args.shed_window,
                         slo_classes=SHED_CLASSES)
@@ -203,16 +208,17 @@ def main(argv=None):
 
     sd, reports = run_once(args.load)
 
-    # analytic multi-SSD serving percentiles at the matching offered load
+    # modeled multi-SSD serving percentiles at the matching offered load,
+    # through the selected costmodel backend (--model)
     w = workload.from_counters(sd.counters, cfg, index_bytes=index.nbytes)
     if w.n_reads:
+        cm = costmodel.get_model(args.model)
         arr = ssd_model.SSDArrayConfig(n_ssds=args.n_ssds,
                                        n_failed=args.n_failed)
-        batch = ssd_model.mars_array_latency(w, arr)
+        batch = cm.array_latency(w, arr)
         cap = w.n_reads / batch["total"]          # reads/s at saturation
-        sv = ssd_model.serving_latency(w, offered_load=args.load * cap,
-                                       arr=arr)
-        tag = f"{args.n_ssds}-SSD array"
+        sv = cm.serving(w, offered_load=args.load * cap, arr=arr)
+        tag = f"{args.n_ssds}-SSD array [{cm.name}]"
         if args.n_failed:
             tag += f" (DEGRADED: {arr.n_serving} serving)"
         print(f"[model] {tag}: batch={batch['total']*1e3:.2f}ms "

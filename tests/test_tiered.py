@@ -232,3 +232,58 @@ def test_tiered_serve_parity(setup, cache_slots):
         np.testing.assert_array_equal(got.score, np.asarray(want.score))
         np.testing.assert_array_equal(got.mapped, np.asarray(want.mapped))
     assert set(sd.counters) == set(stages.CHUNK_COUNTER_SCHEMA)
+
+
+# --------------------------------------------------------------------------- #
+# Pre-pass reuse (the probe's detect/quantize/seed feeds the main pass)
+# --------------------------------------------------------------------------- #
+def test_prepass_reuse_bit_parity(setup, base_out):
+    """Reusing the traffic pre-pass's detect->quantize->seed outputs in
+    the main pass (the default) is bit-identical to recomputing them AND
+    to the resident-index path — outputs and every counter."""
+    cfg, _, reads, idx = setup
+    on = Mapper(idx, cfg, backend="tiered", tiles=8, cache_slots=4)
+    off = Mapper(idx, cfg, backend="tiered", tiles=8, cache_slots=4,
+                 reuse_prepass=False)
+    assert on.cache.reuse_prepass and not off.cache.reuse_prepass
+    _assert_parity(base_out, on.map_signals(reads.signals, chunk=8))
+    _assert_parity(base_out, off.map_signals(reads.signals, chunk=8))
+
+
+def test_prepass_planes_in_view(setup):
+    """The prepared view carries the PREPASS_KEYS planes exactly when
+    reuse is on — including on the overflow (wide-view) path — and the
+    planes equal the cheap phase's own detect/quantize/seed outputs."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import stages as stages_mod
+    from repro.core.tiered import PREPASS_KEYS
+
+    cfg, _, reads, idx = setup
+    m = Mapper(idx, cfg, backend="tiered", tiles=8, cache_slots=4)
+    sig = reads.signals[:8]
+    view = m.cache.prepare(sig, cfg, m.plan)
+    assert all(k in view for k in PREPASS_KEYS)
+
+    def one(signal):
+        st = stages_mod.execute_stages({"signal": signal, "counters": {}},
+                                       {}, cfg, m.plan,
+                                       ("detect", "quantize", "seed"))
+        return st["keys"], st["seed_valid"], st["n_events"]
+    keys, valid, nev = jax.vmap(one)(jnp.asarray(sig))
+    np.testing.assert_array_equal(np.asarray(view["t_pre_keys"]),
+                                  np.asarray(keys))
+    np.testing.assert_array_equal(np.asarray(view["t_pre_valid"]),
+                                  np.asarray(valid))
+    np.testing.assert_array_equal(np.asarray(view["t_pre_nev"]),
+                                  np.asarray(nev))
+
+    thrash = Mapper(idx, cfg, backend="tiered", tiles=16, cache_slots=1)
+    wide = thrash.cache.prepare(sig, cfg, thrash.plan)
+    assert all(k in wide for k in PREPASS_KEYS)
+
+    no = Mapper(idx, cfg, backend="tiered", tiles=8, cache_slots=4,
+                reuse_prepass=False)
+    bare = no.cache.prepare(sig, cfg, no.plan)
+    assert not any(k in bare for k in PREPASS_KEYS)
