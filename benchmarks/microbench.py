@@ -32,6 +32,11 @@ split by stage group:
                   a device cache several times smaller than the index,
                   prefetching driver loop) vs the fully-resident table,
                   plus the cache's hit-rate / paged-bytes telemetry
+    fused         the whole-phase mega-kernel group (top-level ``fused``
+                  key): the cheap phase through kernels/cheap_fused (ONE
+                  kernel launch, DMA-streamed index tiles) vs the same
+                  pallas plan's per-stage program
+                  (``pipeline.cheap_phase(use_fused=False)``)
 
 ``scripts/bench_pipeline.py`` drives this and appends the results to
 ``BENCH_pipeline.json`` at the repo root so every PR records the perf
@@ -39,6 +44,12 @@ trajectory (see EXPERIMENTS.md).
 
 All timings are min-over-repeats of a blocking call AFTER a warm-up call,
 so compile time is excluded and cache effects are steady-state.
+
+Quick-profile honesty rule: the interpret-mode pallas groups may run on a
+REDUCED read grid (``run(pallas_reduced_reads=...)``) to keep CI bench
+wall time bounded; every reduced record carries explicit ``grid_reads`` /
+``grid_reduced`` markers, and pre/fast pairs always share the same grid so
+the gated RATIOS stay honest.
 """
 from __future__ import annotations
 
@@ -498,6 +509,67 @@ def bench_cache_ratio(cfg: MarsConfig, signals, arrays,
             "cache_speedup_median": ratio}
 
 
+def _fused_programs(cfg: MarsConfig, signals, arrays):
+    """(fast_call, pre_call): the whole-phase fused mega-kernel
+    (kernels/cheap_fused — ONE launch, detect..vote resident, index tiles
+    DMA-streamed through scratch) vs the SAME pallas plan's per-stage
+    batch program (``pipeline.cheap_phase(use_fused=False)``: separate
+    detect kernel, pLUTo gathers and segment-sum vote with every
+    intermediate materialized between launches).  Outputs are bit-identical
+    (tests/kernels/test_cheap_fused.py); the timing difference is the
+    launch + HBM round-trip overhead the fusion removes."""
+    packed, _ = _split_arrays(arrays)
+    plan = stages.resolve_plan(cfg, stages.PALLAS)
+    prims = stages.cheap_primitives(plan, cfg)
+    if prims is None or prims.fused is None:
+        raise ValueError(
+            f"plan {plan} resolves no fused cheap kernel "
+            "(stages.register_fused_cheap); the fused microbenchmark "
+            "cannot time it")
+    fast_j = jax.jit(
+        lambda s: pipeline.cheap_phase(s, packed, cfg, plan))
+    pre_j = jax.jit(
+        lambda s: pipeline.cheap_phase(s, packed, cfg, plan,
+                                       use_fused=False))
+    return (lambda: fast_j(signals)), (lambda: pre_j(signals))
+
+
+# Default read-grid cap for the fused gate phase: the pre side runs the
+# full per-stage interpret-mode pallas program, so the gate trims the grid
+# to keep `run_tier1.sh --bench` wall time bounded (the reduction is
+# recorded in the gate record; both sides share the grid).
+FUSED_GATE_READS = 8
+
+
+def bench_fused(cfg: MarsConfig, signals, arrays,
+                repeats: int = 5) -> Dict[str, float]:
+    """The fused mega-kernel group: interleaved fused-vs-per-stage cheap
+    phase on the pallas plan, plus the grid markers."""
+    fast_c, pre_c = _fused_programs(cfg, signals, arrays)
+    tf, tp, ratio = _interleaved(fast_c, pre_c, rounds=max(repeats, 3))
+    return {"fused_fast": tf, "fused_pre": tp, "fused_speedup": ratio,
+            "fused_n_reads": int(signals.shape[0]),
+            "fused_mode": ("interpret" if jax.default_backend() == "cpu"
+                           else jax.default_backend())}
+
+
+def bench_fused_ratio(cfg: MarsConfig, signals, arrays,
+                      backend: str = stages.PALLAS,
+                      rounds: int = 25,
+                      n_reads: int = FUSED_GATE_READS) -> Dict[str, float]:
+    """The fused twin of ``bench_chain_ratio``: interleaved per-stage-pallas
+    (pre) vs mega-kernel (fast) rounds over the same reads, median paired
+    ratio as the machine-speed-independent gate estimator."""
+    del backend              # the fused/per-stage pair IS the pallas backend
+    if n_reads and n_reads < signals.shape[0]:
+        signals = signals[:n_reads]
+    fast_c, pre_c = _fused_programs(cfg, signals, arrays)
+    tf, tp, ratio = _interleaved(fast_c, pre_c, rounds)
+    return {"fused_fast_min": tf, "fused_pre_min": tp, "rounds": rounds,
+            "n_reads": int(signals.shape[0]),
+            "fused_speedup_median": ratio}
+
+
 def bench_chain_ratio(cfg: MarsConfig, signals, arrays,
                       backend: str = stages.REFERENCE,
                       rounds: int = 25) -> Dict[str, float]:
@@ -530,7 +602,14 @@ def bench_cheap_ratio(cfg: MarsConfig, signals, arrays,
 
 def run(n_reads: int = 32, ref_events: int = 20_000, junk_frac: float = 0.5,
         repeats: int = 5, backends=(stages.REFERENCE, stages.PALLAS),
-        seed: int = 0, pallas_serving: bool = True) -> Dict:
+        seed: int = 0, pallas_serving: bool = True,
+        pallas_reduced_reads: int = 0) -> Dict:
+    """One full profile record.  ``pallas_reduced_reads`` > 0 caps the
+    pallas backend's bench groups (and the fused group) to that many reads
+    — the interpret-mode per-read "pre" programs dominate bench wall time
+    — with the reduction marked in the record (``grid_reads`` /
+    ``grid_reduced``) so the recorded ratios stay honest: the pre/fast
+    pair of every group shares one grid."""
     cfg, signals, arrays = make_workload(n_reads, ref_events, junk_frac, seed)
     rec = {
         "git_sha": git_sha(),
@@ -544,10 +623,17 @@ def run(n_reads: int = 32, ref_events: int = 20_000, junk_frac: float = 0.5,
                          chain_capacity_frac=cfg.chain_capacity_frac),
         "backends": {},
     }
+    reduced = (0 < pallas_reduced_reads < n_reads)
+    sig_pallas = signals[:pallas_reduced_reads] if reduced else signals
     for b in backends:
         inc = pallas_serving or b != stages.PALLAS
-        rec["backends"][b] = bench_backend(cfg, signals, arrays, b,
+        sig_b = sig_pallas if b == stages.PALLAS else signals
+        rec["backends"][b] = bench_backend(cfg, sig_b, arrays, b,
                                            repeats=repeats,
                                            include_serving=inc)
+        rec["backends"][b].update(grid_reads=int(sig_b.shape[0]),
+                                  grid_reduced=bool(sig_b.shape[0]
+                                                    < n_reads))
     rec["cache"] = bench_cache(cfg, signals, arrays, repeats=repeats)
+    rec["fused"] = bench_fused(cfg, sig_pallas, arrays, repeats=repeats)
     return rec

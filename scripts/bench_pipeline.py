@@ -9,10 +9,23 @@ to BENCH_pipeline.json at the repo root (the per-PR perf trajectory file).
                                           # through the driver loop, ~22s)
     scripts/bench_pipeline.py --check     # quick measurement, compared to
                                           # the committed baseline: exits 1
-                                          # if the chaining, cheap, serving
-                                          # OR tiered-cache phase time
-                                          # regressed > 20% (skips cleanly
-                                          # when no baseline exists)
+                                          # if the chaining, cheap, serving,
+                                          # tiered-cache OR fused-kernel
+                                          # phase time regressed > 20%
+                                          # (skips cleanly when no baseline
+                                          # exists)
+    scripts/bench_pipeline.py --compiled  # opt-in: re-measure the quick
+                                          # profile in compiled (non-
+                                          # interpret) kernel mode and store
+                                          # it under a hardware-keyed
+                                          # ``compiled_<backend>`` profile;
+                                          # prints a note and exits 0 on
+                                          # CPU-only hosts where kernels
+                                          # only run in interpret mode
+    scripts/bench_pipeline.py --support   # print the kernel-backend
+                                          # supports matrix (which
+                                          # registered backends engage per
+                                          # config) and exit
 
 Profiles are compared like-for-like (quick vs quick), so --check is immune
 to the workload-size difference between profiles.  The gate compares
@@ -20,8 +33,15 @@ interleaved pre/fast speedup RATIOS (never absolute ms), so it is safe on
 CI runners whose absolute speed differs from the machine that measured the
 committed baseline; each record still carries a ``machine`` hardware key
 so cross-machine comparisons are visible.  ``BENCH_GATE_PCT`` overrides
-the 20% tolerance (e.g. BENCH_GATE_PCT=35 on noisy shared runners).  See
-EXPERIMENTS.md for how to read the file.
+the 20% tolerance (e.g. BENCH_GATE_PCT=35 on noisy shared runners).
+
+The quick profile deliberately runs the pallas backend (and the fused
+mega-kernel group) on a REDUCED read grid (``pallas_reduced_reads``):
+interpret-mode kernels are ~100x slower than compiled ones, and the gate
+ratios are per-read-normalized so the reduction keeps them honest.  Every
+record carries ``grid_reads``/``grid_reduced`` markers so a reduced grid
+is never mistaken for the full one.  See EXPERIMENTS.md for how to read
+the file.
 """
 from __future__ import annotations
 
@@ -39,13 +59,22 @@ sys.path.insert(0, str(REPO))
 DEFAULT_OUT = REPO / "BENCH_pipeline.json"
 
 PROFILES = {
-    "quick": dict(n_reads=16, ref_events=8_000, junk_frac=0.5, repeats=5),
+    # quick caps the interpret-mode pallas groups (incl. the fused kernel)
+    # to a reduced read grid; records are marked grid_reduced=True
+    "quick": dict(n_reads=16, ref_events=8_000, junk_frac=0.5, repeats=5,
+                  pallas_reduced_reads=8),
     "full": dict(n_reads=32, ref_events=20_000, junk_frac=0.5, repeats=7),
 }
 
-GATE_PHASES = ("chain", "cheap", "serving", "cache")
+GATE_PHASES = ("chain", "cheap", "serving", "cache", "fused")
 CHECK_BACKEND = "reference"     # backend whose gate ratios are gated
 CHECK_REPEATS = 25
+# the fused gate times interpret-mode pallas kernels (slow), so it runs
+# fewer interleaved rounds than the jnp-only phases
+PHASE_ROUNDS = {"fused": 9}
+# the fused gate is pallas-vs-pallas by construction (fused mega-kernel
+# against the per-stage pallas program); the others gate CHECK_BACKEND
+PHASE_BACKEND = {"fused": "pallas"}
 
 
 def gate_tol() -> float:
@@ -81,6 +110,12 @@ def measure(profiles, **kw):
               f"speedup={ref['serving_speedup']:.2f}x "
               f"({ref['serving_streams_per_sec']:.1f} streams/s, "
               f"p99={ref['serving_p99_virtual']:.2f} virtual)", flush=True)
+        fused = out[name]["fused"]
+        print(f"[bench_pipeline] {name}: fused={fused['fused_fast']*1e3:.2f}ms "
+              f"per-stage={fused['fused_pre']*1e3:.2f}ms "
+              f"fused_gate={fused['fused_speedup']:.2f}x "
+              f"({fused['fused_n_reads']} reads, {fused['fused_mode']} mode)",
+              flush=True)
         cache = out[name]["cache"]
         print(f"[bench_pipeline] {name}: cache_resident="
               f"{cache['cache_resident']*1e3:.2f}ms "
@@ -112,9 +147,10 @@ def write(path: pathlib.Path, measured) -> None:
 
 def measure_gate():
     """The interleaved pre/fast ratios on the quick workload — one record
-    per gated phase (chain, cheap, serving, cache), all machine-speed
-    independent (see microbench.bench_chain_ratio / bench_cheap_ratio /
-    bench_serving_ratio / bench_cache_ratio)."""
+    per gated phase (chain, cheap, serving, cache, fused), all machine-
+    speed independent (see microbench.bench_chain_ratio /
+    bench_cheap_ratio / bench_serving_ratio / bench_cache_ratio /
+    bench_fused_ratio)."""
     from benchmarks import microbench
     params = PROFILES["quick"]
     print(f"[bench_pipeline] measuring interleaved {'/'.join(GATE_PHASES)} "
@@ -124,20 +160,23 @@ def measure_gate():
     fns = dict(chain=microbench.bench_chain_ratio,
                cheap=microbench.bench_cheap_ratio,
                serving=microbench.bench_serving_ratio,
-               cache=microbench.bench_cache_ratio)
+               cache=microbench.bench_cache_ratio,
+               fused=microbench.bench_fused_ratio)
     gates = {}
     for phase in GATE_PHASES:
-        rec = fns[phase](cfg, signals, arrays, CHECK_BACKEND,
-                         rounds=CHECK_REPEATS)
-        rec["backend"] = CHECK_BACKEND
+        backend = PHASE_BACKEND.get(phase, CHECK_BACKEND)
+        rec = fns[phase](cfg, signals, arrays, backend,
+                         rounds=PHASE_ROUNDS.get(phase, CHECK_REPEATS))
+        rec["backend"] = backend
         rec["machine"] = hardware_key()
         gates[phase] = rec
     return gates
 
 
 def check(path: pathlib.Path) -> int:
-    """Regression gate on the chaining, cheap, serving AND tiered-cache
-    phases, machine-speed independent: compares the median interleaved pre/fast
+    """Regression gate on the chaining, cheap, serving, tiered-cache AND
+    fused-kernel phases, machine-speed independent: compares the median
+    interleaved pre/fast
     speedup ratio of each phase against the baseline's identically-measured
     ``<phase>_gate`` record.  A rise in any phase's normalized time beyond
     ``gate_tol()`` (default 20%; BENCH_GATE_PCT overrides) fails; a phase
@@ -183,6 +222,36 @@ def check(path: pathlib.Path) -> int:
     return failed
 
 
+def measure_compiled(path: pathlib.Path) -> int:
+    """Opt-in compiled-mode profile: re-measure the quick workload with the
+    Pallas kernels actually compiled (Mosaic/Triton) rather than
+    interpreted, and store it under a ``compiled_<backend>`` profile keyed
+    by the machine's hardware fingerprint.  The regression gates only ever
+    read ``profiles["quick"]``, so a committed compiled profile never
+    perturbs --check.  On CPU-only hosts (where kernels run in interpret
+    mode by construction) this prints a note and exits 0 so the flag is
+    safe in CI."""
+    import jax
+    backend = jax.default_backend()
+    if backend == "cpu":
+        print("[bench_pipeline] --compiled: jax backend is 'cpu', where "
+              "Pallas kernels only run in interpret mode; nothing to "
+              "measure.  Run on an accelerator host to record a "
+              "compiled_<backend> profile.")
+        return 0
+    key = f"compiled_{backend}"
+    print(f"[bench_pipeline] measuring compiled-mode quick profile "
+          f"under {key!r} ...", flush=True)
+    # compiled kernels are fast: run the full read grid (no reduction)
+    measured = measure(("quick",), pallas_serving=True,
+                       pallas_reduced_reads=0)
+    rec = measured["quick"]
+    rec["kernel_mode"] = "compiled"
+    rec["machine"] = hardware_key()
+    write(path, {key: rec})
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
@@ -190,9 +259,21 @@ def main(argv=None) -> int:
     ap.add_argument("--check", action="store_true",
                     help="compare a quick measurement against the committed "
                          "baseline instead of writing it")
+    ap.add_argument("--compiled", action="store_true",
+                    help="measure a compiled-mode (non-interpret) quick "
+                         "profile under a hardware-keyed compiled_<backend> "
+                         "key; no-op on CPU-only hosts")
+    ap.add_argument("--support", action="store_true",
+                    help="print the kernel-backend supports matrix and exit")
     ap.add_argument("--out", type=pathlib.Path, default=DEFAULT_OUT)
     args = ap.parse_args(argv)
 
+    if args.support:
+        sys.path.insert(0, str(REPO / "scripts"))
+        import kernel_support
+        return kernel_support.main()
+    if args.compiled:
+        return measure_compiled(args.out)
     if args.check:
         return check(args.out)
     profiles = ("quick",) if args.quick else ("quick", "full")

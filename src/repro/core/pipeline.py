@@ -28,7 +28,7 @@ workload counts never inflate on non-multiple-of-chunk inputs.
 """
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Optional
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import functools
 import math
@@ -76,7 +76,7 @@ def cheap_phase_vmap(signals: jnp.ndarray, index: Dict[str, jnp.ndarray],
 
 
 def cheap_phase(signals: jnp.ndarray, index: Dict[str, jnp.ndarray],
-                cfg: MarsConfig, plan: stages.Plan):
+                cfg: MarsConfig, plan: stages.Plan, use_fused: bool = True):
     """The cheap phase (detect..vote) over a chunk, batch-level where the
     plan allows (``stages.cheap_primitives``).
 
@@ -84,6 +84,13 @@ def cheap_phase(signals: jnp.ndarray, index: Dict[str, jnp.ndarray],
     counters dict) — everything the chaining phase and the chunk counter
     schema need.  ``counters["n_anchors_postvote"]`` is the per-read
     post-filter anchor count the compaction gate keys on.
+
+    Dispatch ladder, most-fused first: (1) the whole-phase mega-kernel
+    (``stages.register_fused_cheap``) when the plan's cheap stages match one
+    — detect..vote in ONE kernel launch, index tiles DMA-streamed through
+    scratch (kernels/cheap_fused); (2) the per-stage batch level below;
+    (3) ``cheap_phase_vmap``.  ``use_fused=False`` pins level (2) — the
+    fused-vs-per-stage microbenchmark pair and parity tests use it.
 
     Batch level means: detect runs ONCE per chunk (the Pallas event_detect
     kernel's native grid, no unit-batch vmap), the hash-table query issues
@@ -97,6 +104,9 @@ def cheap_phase(signals: jnp.ndarray, index: Dict[str, jnp.ndarray],
     prims = stages.cheap_primitives(plan, cfg)
     if prims is None:
         return cheap_phase_vmap(signals, index, cfg, plan)
+
+    if use_fused and prims.fused is not None and "t_pre_keys" not in index:
+        return prims.fused(signals, index)
 
     if "t_pre_keys" in index:
         # the tiered traffic pre-pass already ran the plan's own
@@ -321,7 +331,8 @@ def map_chunk(signals: jnp.ndarray, index: Dict[str, jnp.ndarray],
 # Sharded chunk mapping (shard_map over the read axis)
 # --------------------------------------------------------------------------- #
 @functools.lru_cache(maxsize=None)
-def _sharded_chunk_fn(cfg: MarsConfig, mesh, plan: stages.Plan):
+def _sharded_chunk_fn(cfg: MarsConfig, mesh, plan: stages.Plan,
+                      index_keys: Optional[Tuple[str, ...]] = None):
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
@@ -344,6 +355,15 @@ def _sharded_chunk_fn(cfg: MarsConfig, mesh, plan: stages.Plan):
     if stages.plan_index_kind(plan) == "partitioned":
         from repro.core.index import INDEX_AXIS, PARTITIONED_INDEX_KEYS
         index_spec = {k: P(INDEX_AXIS) for k in PARTITIONED_INDEX_KEYS}
+    elif index_keys is not None:
+        # tiered view carrying the traffic pre-pass's per-read planes
+        # (core/tiered.PREPASS_KEYS): those shard over the read axis like
+        # the signals so cheap_phase reuse survives the mesh; the tile
+        # planes stay replicated
+        per_read = {"t_pre_keys": P(axes, None),
+                    "t_pre_valid": P(axes, None),
+                    "t_pre_nev": P(axes)}
+        index_spec = {k: per_read.get(k, P()) for k in index_keys}
     else:
         index_spec = P()
     counter_spec = {k: P() for k in stages.CHUNK_COUNTER_SCHEMA}
@@ -364,6 +384,17 @@ def sharded_chunk_fn(cfg: MarsConfig, mesh, plan: stages.Plan):
     (launch/dryrun.py), where device_put on ShapeDtypeStructs is
     impossible.  Cached per (cfg, mesh, plan)."""
     return _sharded_chunk_fn(cfg, mesh, plan)
+
+
+def _prepass_index_keys(index) -> Optional[Tuple[str, ...]]:
+    """The index pytree's key set when it carries per-read traffic-pre-pass
+    planes (tiered reuse_prepass under a mesh) — the sharded chunk fn needs
+    per-key in_specs for those; None for every other index layout."""
+    try:
+        keys = tuple(sorted(index))
+    except TypeError:
+        return None
+    return keys if "t_pre_keys" in keys else None
 
 
 def map_chunk_sharded(signals: jnp.ndarray, index: Dict[str, jnp.ndarray],
@@ -400,8 +431,8 @@ def map_chunk_sharded(signals: jnp.ndarray, index: Dict[str, jnp.ndarray],
     sig_sh, _ = mapping_chunk_shardings(mesh)
     signals = jax.device_put(signals, sig_sh)
     nv = jnp.int32(R if n_valid is None else n_valid)
-    t, s, m, ne, counters = _sharded_chunk_fn(cfg, mesh, plan)(
-        signals, index, nv)
+    t, s, m, ne, counters = _sharded_chunk_fn(
+        cfg, mesh, plan, _prepass_index_keys(index))(signals, index, nv)
     return MapOutput(t_start=t, score=s, mapped=m, n_events=ne,
                      counters=counters)
 
@@ -432,8 +463,9 @@ class Mapper:
     from the streaming ``build_index_streaming``), in which case ``tiles``
     is ignored.  ``reuse_prepass`` (default) forwards the traffic
     pre-pass's detect/quantize/seed outputs to the main pass so that work
-    runs once per chunk, not twice — bit-identical to recomputing, and
-    forced off under a mesh (the sharded program shards per-read planes).
+    runs once per chunk, not twice — bit-identical to recomputing, on the
+    sharded path too (the sharded chunk program's index in_specs shard the
+    per-read pre-pass planes over the read axis).
 
     ``fault_plan`` (tiered backend only) attaches a seeded
     ``core/faults.FaultPlan`` injection harness to the cache's page-in

@@ -85,6 +85,9 @@ _BACKEND_MODULES: Dict[str, Tuple[str, ...]] = {
         "repro.kernels.pluto_lookup.ops",
         "repro.kernels.bitonic_sort.ops",
         "repro.kernels.chain_dp.ops",
+        # whole-phase fused cheap kernel (registers through
+        # register_fused_cheap, not the per-stage registry)
+        "repro.kernels.cheap_fused.ops",
     ),
     "ring": ("repro.core.distributed",),
     "a2a": ("repro.core.distributed",),
@@ -292,6 +295,55 @@ def chain_primitives(plan: Plan, cfg: MarsConfig):
 
 
 @dataclasses.dataclass(frozen=True)
+class FusedCheapBackend:
+    """A whole-phase fused implementation of CHEAP_STAGES.
+
+    fn(signals (R,S), index, cfg) -> (q_pos, t_pos, hit_valid, counters) —
+    the exact ``pipeline.cheap_phase`` contract, produced by ONE kernel
+    launch instead of per-stage programs.  ``supports`` gates configs the
+    kernel cannot serve; unsupported configs silently resolve to the
+    per-stage plan (pipeline.cheap_phase's existing dispatch ladder).
+    """
+    name: str
+    fn: Callable
+    supports: Optional[Callable[[MarsConfig], bool]] = None
+
+
+_FUSED_CHEAP: Dict[str, FusedCheapBackend] = {}
+
+
+def register_fused_cheap(name: str, fn, supports=None,
+                         replace: bool = False) -> None:
+    """Register a whole-phase fused cheap kernel under backend ``name``.
+
+    The fused kernel engages only for plans whose detect AND query stages
+    resolved to ``name`` with quantize/seed/vote at reference — i.e. the
+    per-stage programs it replaces are exactly the ones it fuses, so parity
+    is against the plan's own math, never a different backend's.
+    """
+    if name in _FUSED_CHEAP and not replace:
+        raise ValueError(f"fused cheap backend {name!r} already registered")
+    _FUSED_CHEAP[name] = FusedCheapBackend(name=name, fn=fn,
+                                           supports=supports)
+
+
+def fused_cheap_backend(plan: Plan,
+                        cfg: MarsConfig) -> Optional[FusedCheapBackend]:
+    """Resolve ``plan``'s whole-phase fused kernel, or None when the plan's
+    cheap stages are not the exact per-stage shape the fusion covers (or the
+    kernel's ``supports`` gate rejects ``cfg``)."""
+    p = dict(plan)
+    b = _FUSED_CHEAP.get(p["detect"])
+    if b is None or p["query"] != b.name:
+        return None
+    if any(p[s] != REFERENCE for s in ("quantize", "seed", "vote")):
+        return None
+    if b.supports is not None and not b.supports(cfg):
+        return None
+    return b
+
+
+@dataclasses.dataclass(frozen=True)
 class CheapPrimitives:
     """Resolved batch-level implementations of a plan's cheap phase
     (core/pipeline.cheap_phase).
@@ -302,10 +354,14 @@ class CheapPrimitives:
     call, or None for jnp.take.  ``query_fn``: set instead of ``gather``
     when the query backend is not gather-expressible (the partitioned-index
     ring/a2a schedules) — the registered stage body, vmapped per read.
+    ``fused``: the whole-phase mega-kernel (register_fused_cheap) when the
+    plan's cheap stages match one — signals in, (q_pos, t_pos, hit_valid,
+    counters) out, no per-stage launches at all.
     """
     detector: Optional[Callable] = None
     gather: Optional[Callable] = None
     query_fn: Optional[Callable] = None
+    fused: Optional[Callable] = None
 
 
 def cheap_primitives(plan: Plan, cfg: MarsConfig) -> Optional[CheapPrimitives]:
@@ -325,12 +381,16 @@ def cheap_primitives(plan: Plan, cfg: MarsConfig) -> Optional[CheapPrimitives]:
     det_prim = det.primitive
     detector = (None if det.name == REFERENCE
                 else (lambda signals: det_prim(signals, cfg)))
+    fused_b = fused_cheap_backend(plan, cfg)
+    fused = (None if fused_b is None
+             else (lambda signals, index: fused_b.fn(signals, index, cfg)))
     q = _REGISTRY[("query", p["query"])]
     if q.name == REFERENCE:
-        return CheapPrimitives(detector=detector)
+        return CheapPrimitives(detector=detector, fused=fused)
     if q.primitive is not None:
-        return CheapPrimitives(detector=detector, gather=q.primitive)
-    return CheapPrimitives(detector=detector, query_fn=q.fn)
+        return CheapPrimitives(detector=detector, gather=q.primitive,
+                               fused=fused)
+    return CheapPrimitives(detector=detector, query_fn=q.fn, fused=fused)
 
 
 def missing_counters(counters: Dict[str, Any]) -> Tuple[str, ...]:

@@ -256,11 +256,11 @@ class HotTileCache:
         self.tiered = tiered
         self.n_slots = min(int(n_slots), tiered.n_tiles)
         self.mesh = mesh
-        # the pre-pass's detect/quantize/seed outputs can only feed the
-        # main pass off the sharded path: the sharded chunk program's
-        # in_specs shard per-read planes, the replicated index dict can't
-        # carry them
-        self.reuse_prepass = bool(reuse_prepass) and mesh is None
+        # the pre-pass's detect/quantize/seed outputs feed the main pass on
+        # the sharded path too: the sharded chunk program's index in_specs
+        # shard the per-read PREPASS_KEYS planes over the read axis while
+        # the tile planes stay replicated (pipeline._sharded_chunk_fn)
+        self.reuse_prepass = bool(reuse_prepass)
         self.policy = policy
         self._rng = np.random.default_rng(seed)
         self._rep = None
@@ -398,6 +398,16 @@ class HotTileCache:
             # hand the probe's outputs to the chunk program (PREPASS_KEYS):
             # bit-identical to the cheap phase it would recompute, since
             # both run the plan's own detect/quantize/seed stages
+            if self.mesh is not None:
+                # per-read planes shard over the read axis like the signals
+                # (the sharded chunk program's index in_specs expect it)
+                from jax.sharding import NamedSharding, PartitionSpec
+                axes = tuple(self.mesh.axis_names)
+                sh2 = NamedSharding(self.mesh, PartitionSpec(axes, None))
+                sh1 = NamedSharding(self.mesh, PartitionSpec(axes))
+                keys = jax.device_put(keys, sh2)
+                valid = jax.device_put(valid, sh2)
+                n_ev = jax.device_put(n_ev, sh1)
             view = dict(view, t_pre_keys=keys, t_pre_valid=valid,
                         t_pre_nev=n_ev)
         return view

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for cheap_fused: the core pipeline's own per-read path.
+
+The mega-kernel's primary parity comparand is the per-stage program of its
+OWN plan (``pipeline.cheap_phase(..., use_fused=False)``); this oracle pins
+the reference-backend math the whole ladder bottoms out in.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import pipeline, stages
+from repro.core.config import MarsConfig
+
+
+def cheap_fused_ref(signals: jnp.ndarray, index, cfg: MarsConfig):
+    plan = stages.resolve_plan(cfg, stages.REFERENCE)
+    return pipeline.cheap_phase_vmap(signals, index, cfg, plan)

@@ -1,0 +1,163 @@
+"""Fused cheap-phase mega-kernel vs the per-stage programs.
+
+The contract under test: for every supported config the ONE-launch
+mega-kernel (detect -> quantize -> seed -> query -> vote, intermediates
+kernel-resident, index planes DMA-streamed tile by tile) is bit-identical
+to ``pipeline.cheap_phase(..., use_fused=False)`` (the per-stage batch
+program) and to ``pipeline.cheap_phase_vmap`` (the per-read reference
+ladder) — arrays AND every counter.  Unsupported configs must resolve to
+``prims.fused is None`` and fall through the ladder unchanged.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MarsConfig, build_index, pipeline, stages
+from repro.core.index import index_arrays
+from repro.kernels.cheap_fused import FusedTile, cheap_fused
+from repro.kernels.cheap_fused import ref as fused_ref
+from repro.signal import simulate
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = MarsConfig(hash_bits=12).with_mode("ms_fixed")
+    ref = simulate.make_reference(6_000, seed=9)
+    reads = simulate.sample_reads(ref, 6, signal_len=cfg.signal_len,
+                                  seed=10, junk_frac=0.3)
+    idx = build_index(ref.events_concat, ref.n_events, cfg)
+    return cfg, jnp.asarray(reads.signals), index_arrays(idx)
+
+
+def _assert_cheap_equal(got, want):
+    gq, gt, gv, gc = got
+    wq, wt, wv, wc = want
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
+    np.testing.assert_array_equal(np.asarray(gq), np.asarray(wq))
+    np.testing.assert_array_equal(np.asarray(gt), np.asarray(wt))
+    assert set(gc) == set(wc)
+    for k in wc:
+        np.testing.assert_array_equal(np.asarray(gc[k]), np.asarray(wc[k]),
+                                      err_msg=f"counter {k!r}")
+
+
+def test_fused_engages_on_supported_plan(setup):
+    """A pallas plan on the fixed/early-quant config must resolve the
+    whole-phase kernel, not just per-stage primitives."""
+    cfg, _, _ = setup
+    plan = stages.resolve_plan(cfg, stages.PALLAS)
+    assert stages.fused_cheap_backend(plan, cfg) is not None
+    prims = stages.cheap_primitives(plan, cfg)
+    assert prims is not None and prims.fused is not None
+
+
+def test_fused_matches_per_stage_and_vmap(setup):
+    """cheap_phase (fused) == cheap_phase(use_fused=False) ==
+    cheap_phase_vmap, arrays and all counters."""
+    cfg, signals, arrays = setup
+    plan = stages.resolve_plan(cfg, stages.PALLAS)
+    fused = pipeline.cheap_phase(signals, arrays, cfg, plan)
+    per_stage = pipeline.cheap_phase(signals, arrays, cfg, plan,
+                                     use_fused=False)
+    vmapped = pipeline.cheap_phase_vmap(signals, arrays, cfg, plan)
+    _assert_cheap_equal(fused, per_stage)
+    # the vmap ladder carries the same uniform counters; compare on the
+    # intersection (batch programs may add debug counters)
+    fq, ft, fv, fc = fused
+    vq, vt, vv, vc = vmapped
+    np.testing.assert_array_equal(np.asarray(fv), np.asarray(vv))
+    np.testing.assert_array_equal(np.asarray(fq), np.asarray(vq))
+    np.testing.assert_array_equal(np.asarray(ft), np.asarray(vt))
+    for k in set(fc) & set(vc):
+        np.testing.assert_array_equal(np.asarray(fc[k]), np.asarray(vc[k]),
+                                      err_msg=f"counter {k!r}")
+
+
+@pytest.mark.parametrize("n_reads,tile", [
+    (1, FusedTile(r_blk=1, bt=512)),
+    (3, FusedTile(r_blk=2, bt=128)),    # row padding: 3 reads, blocks of 2
+    (5, FusedTile(r_blk=3, bt=64)),     # 5 reads, blocks of 3
+])
+def test_fused_odd_shapes_and_tiles(setup, n_reads, tile):
+    """Read counts that do not divide the row block + small DMA tiles that
+    force many partial index sweeps must stay bit-exact."""
+    cfg, signals, arrays = setup
+    got = cheap_fused(signals[:n_reads], arrays, cfg, tile=tile)
+    want = fused_ref.cheap_fused_ref(signals[:n_reads], arrays, cfg)
+    gq, gt, gv, gc = got
+    wq, wt, wv, wc = want
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
+    np.testing.assert_array_equal(np.asarray(gq), np.asarray(wq))
+    np.testing.assert_array_equal(np.asarray(gt), np.asarray(wt))
+    for k in set(gc) & set(wc):
+        np.testing.assert_array_equal(np.asarray(gc[k]), np.asarray(wc[k]),
+                                      err_msg=f"counter {k!r}")
+
+
+def test_fused_index_tile_boundary_probes(setup):
+    """A bucket whose entry range straddles a DMA tile edge must gather the
+    same entries as the untiled per-stage gather.  bt=32 on a 2^12-bucket /
+    multi-thousand-entry index guarantees straddling probes."""
+    cfg, signals, arrays = setup
+    plan = stages.resolve_plan(cfg, stages.PALLAS)
+    got = cheap_fused(signals, arrays, cfg, tile=FusedTile(r_blk=2, bt=32))
+    want = pipeline.cheap_phase(signals, arrays, cfg, plan, use_fused=False)
+    _assert_cheap_equal(got, want)
+
+
+def test_supports_gate_rejects_tstat_overflow():
+    """tstat_window=13 overflows the int32 fixed-point boundary test — the
+    fused kernel's supports gate must reject it (the reference path fails
+    fast at trace time for the same reason, so no ladder run here)."""
+    cfg = MarsConfig(hash_bits=12, tstat_window=13).with_mode("ms_fixed")
+    plan = stages.resolve_plan(cfg, stages.PALLAS)
+    assert stages.fused_cheap_backend(plan, cfg) is None
+    prims = stages.cheap_primitives(plan, cfg)
+    assert prims is None or prims.fused is None
+
+
+@pytest.mark.parametrize("mode", ["ms_float", "rh2"])
+def test_supports_gate_falls_back(mode):
+    """Configs the kernel cannot serve bit-exactly must resolve to no fused
+    backend, and the ladder must still agree with the vmap reference."""
+    cfg = MarsConfig(hash_bits=12).with_mode(mode)
+    plan = stages.resolve_plan(cfg, stages.PALLAS)
+    assert stages.fused_cheap_backend(plan, cfg) is None
+    prims = stages.cheap_primitives(plan, cfg)
+    assert prims is None or prims.fused is None
+    ref = simulate.make_reference(4_000, seed=11)
+    reads = simulate.sample_reads(ref, 3, signal_len=cfg.signal_len,
+                                  seed=12, junk_frac=0.3)
+    idx = build_index(ref.events_concat, ref.n_events, cfg)
+    arrays = index_arrays(idx)
+    signals = jnp.asarray(reads.signals)
+    got = pipeline.cheap_phase(signals, arrays, cfg, plan)   # use_fused=True
+    want = pipeline.cheap_phase_vmap(signals, arrays, cfg, plan)
+    gq, gt, gv, _ = got
+    wq, wt, wv, _ = want
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
+    np.testing.assert_array_equal(np.asarray(gq), np.asarray(wq))
+    np.testing.assert_array_equal(np.asarray(gt), np.asarray(wt))
+
+
+def test_tiered_plan_never_fuses(setup):
+    """The tiered query consumes the hot-tile index view, which the fused
+    kernel cannot stream — the plan must not resolve a fused backend."""
+    cfg, _, _ = setup
+    plan = stages.resolve_plan(cfg, "tiered")
+    assert stages.fused_cheap_backend(plan, cfg) is None
+
+
+def test_minimizer_radius_supported(setup):
+    """Minimizer winnowing changes the seed plane; the fused kernel
+    replicates it (not gated out)."""
+    cfg, signals, arrays0 = setup
+    cfg2 = cfg.replace(minimizer_radius=2)
+    ref = simulate.make_reference(6_000, seed=9)
+    idx = build_index(ref.events_concat, ref.n_events, cfg2)
+    arrays = index_arrays(idx)
+    got = cheap_fused(signals, arrays, cfg2)
+    want = fused_ref.cheap_fused_ref(signals, arrays, cfg2)
+    np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(want[2]))
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))

@@ -95,6 +95,61 @@ def test_partitioned_query_backends_match_single_device():
     assert "ok" in r.stdout
 
 
+PREPASS_SCRIPT = """
+import numpy as np
+import jax
+from jax.sharding import Mesh
+from repro.core import MarsConfig, build_index
+from repro.core.pipeline import Mapper
+from repro.signal import simulate
+
+cfg = MarsConfig(hash_bits=12).with_mode("ms_fixed")
+ref = simulate.make_reference(20_000, seed=3)
+reads = simulate.sample_reads(ref, 16, signal_len=cfg.signal_len, seed=4,
+                              junk_frac=0.3)
+idx = build_index(ref.events_concat, ref.n_events, cfg)
+mesh = Mesh(np.array(jax.devices()).reshape(2, 2), ("data", "model"))
+
+outs = {}
+for name, kw in (("mesh_reuse", dict(mesh=mesh, reuse_prepass=True)),
+                 ("mesh_noreuse", dict(mesh=mesh, reuse_prepass=False)),
+                 ("single", dict(reuse_prepass=True))):
+    m = Mapper(idx, cfg, backend="tiered", tiles=8, cache_slots=4, **kw)
+    # the sharded path no longer forces reuse_prepass off under a mesh
+    assert m.cache.reuse_prepass == kw["reuse_prepass"], name
+    outs[name] = m.chunk_fn()(reads.signals, 16)
+
+base = outs["single"]
+for name in ("mesh_reuse", "mesh_noreuse"):
+    o = outs[name]
+    for f in ("t_start", "score", "mapped", "n_events"):
+        np.testing.assert_array_equal(np.asarray(getattr(o, f)),
+                                      np.asarray(getattr(base, f)),
+                                      err_msg=f"{name}.{f}")
+    for k in base.counters:
+        np.testing.assert_array_equal(np.asarray(o.counters[k]),
+                                      np.asarray(base.counters[k]),
+                                      err_msg=f"{name}.{k}")
+print("ok")
+"""
+
+
+def test_tiered_prepass_reuse_sharded_parity():
+    """Satellite of the fused-kernel PR: the tiered prepass planes
+    (t_pre_keys / t_pre_valid / t_pre_nev) now flow through shard_map
+    in_specs sharded per-read over the mesh 'data' axis — reuse on the
+    sharded path must be bit-identical to reuse off AND to the
+    single-device mapper."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = str(REPO / "src")
+    r = subprocess.run([sys.executable, "-c", PREPASS_SCRIPT],
+                       capture_output=True, text=True, env=env, cwd=REPO,
+                       timeout=560)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "ok" in r.stdout
+
+
 def test_partitioned_plan_rejected_single_device():
     """A partitioned-index plan must not silently run against a replicated
     table on one device."""
