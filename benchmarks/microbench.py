@@ -37,6 +37,13 @@ split by stage group:
                   kernel launch, DMA-streamed index tiles) vs the same
                   pallas plan's per-stage program
                   (``pipeline.cheap_phase(use_fused=False)``)
+    fairness      the multi-tenant fair-serving group (top-level
+                  ``fairness`` key): one flooded two-tenant trace served
+                  with vs without per-tenant shed budgets
+                  (``ServeDriver(tenant_budgets=...)``); the gated metric
+                  is the well-behaved tenant's victim count (sheds +
+                  rejects), measured on the VIRTUAL clock — fully
+                  deterministic, no wall time involved
 
 ``scripts/bench_pipeline.py`` drives this and appends the results to
 ``BENCH_pipeline.json`` at the repo root so every PR records the perf
@@ -447,6 +454,90 @@ def bench_serving_ratio(cfg: MarsConfig, signals, arrays,
             "serving_speedup_median": ratio}
 
 
+# --------------------------------------------------------------------------- #
+# Fairness (multi-tenant shed budgets)
+# --------------------------------------------------------------------------- #
+def _fairness_runs(cfg: MarsConfig, signals, arrays, backend: str,
+                   chunk: int = 8):
+    """One flooded two-tenant trace, served twice: ``run(False)`` is the
+    budget-free legacy driver, ``run(True)`` adds per-tenant shed budgets.
+
+    acme: two short in-budget streams (half the bench reads); flood: one
+    stream of ``5*chunk`` identical reads at HIGHER priority with an
+    empty budget — the starvation shape of tests/test_tenants.py, where
+    the legacy shed rule serves the flooder first and sheds acme.  All
+    arrivals and sheds live on the driver's virtual clock, so both runs
+    are deterministic: the gated ratio never moves with machine speed."""
+    from repro.core.server import ServeDriver, TenantBudget
+
+    arrays_p, _ = _split_arrays(arrays)
+    plan = stages.resolve_plan(cfg, backend)
+    mapper = _PlanMapper(arrays_p, cfg, plan)
+    acme = np.asarray(signals[:max(signals.shape[0] // 2, 2)], np.float32)
+    flood = np.repeat(np.asarray(signals[-1:], np.float32), 5 * chunk,
+                      axis=0)
+    budgets = (TenantBudget("acme", rate=float(chunk)),
+               TenantBudget("flood", rate=0.0, burst=1.0))
+
+    def run(with_budgets: bool) -> "ServeDriver":
+        sd = ServeDriver(mapper, chunk=chunk, shed=True, shed_window=2.0,
+                         cost_model="sim",
+                         tenant_budgets=budgets if with_budgets else None)
+        half = acme.shape[0] // 2
+        sd.submit("a0", acme[:half], tenant="acme", t=0.0)
+        sd.submit("a1", acme[half:], tenant="acme", t=0.0)
+        sd.submit("f0", flood, tenant="flood", priority=1, t=0.0)
+        sd.drain()
+        return sd
+
+    return run
+
+
+def _acme_victims(sd) -> int:
+    # n_rejected is the total not-served count (closed-loop sheds are a
+    # subset of it), so it IS the victim count — no double counting
+    return sum(sd.stream(s).n_rejected for s in ("a0", "a1"))
+
+
+def bench_fairness(cfg: MarsConfig, signals, arrays,
+                   backend: str = stages.REFERENCE,
+                   chunk: int = 8) -> Dict[str, object]:
+    """The fairness pre/post group: the flooded trace without (pre) and
+    with (fast) per-tenant shed budgets.  The headline metric is the
+    well-behaved tenant's victim count — its reads not served (shed or
+    rejected) — which budgets drive to zero by charging the flooder's
+    own overflow instead (tests/test_tenants.py asserts the isolation
+    bit-exactly)."""
+    run = _fairness_runs(cfg, signals, arrays, backend, chunk=chunk)
+    legacy, fair = run(False), run(True)
+    vl, vf = _acme_victims(legacy), _acme_victims(fair)
+    tr = fair.tenant_report()
+    return {"fairness_acme_victims_legacy": vl,
+            "fairness_acme_victims_fair": vf,
+            "fairness_shed_total_legacy": int(legacy.n_shed),
+            "fairness_shed_total_fair": int(fair.n_shed),
+            "fairness_flood_shed_fair": int(tr["flood"].n_shed),
+            "fairness_flood_over_budget": int(tr["flood"].n_over_budget),
+            "fairness_speedup": (1.0 + vl) / (1.0 + vf),
+            "fairness_chunk": chunk, "fairness_backend": backend}
+
+
+def bench_fairness_ratio(cfg: MarsConfig, signals, arrays,
+                         backend: str = stages.REFERENCE,
+                         rounds: int = 1) -> Dict[str, object]:
+    """The fairness twin of ``bench_chain_ratio`` for the regression gate:
+    ``(1 + legacy acme victims) / (1 + budgeted acme victims)`` on the
+    flooded trace.  Unlike the timing gates this is a VIRTUAL-clock count
+    ratio — deterministic by construction, so one round suffices and the
+    gate can never be machine-noise flaky."""
+    run = _fairness_runs(cfg, signals, arrays, backend)
+    vl, vf = _acme_victims(run(False)), _acme_victims(run(True))
+    return {"fairness_acme_victims_legacy": vl,
+            "fairness_acme_victims_fair": vf,
+            "rounds": 1, "deterministic": True,
+            "fairness_speedup_median": (1.0 + vl) / (1.0 + vf)}
+
+
 def _cache_programs(cfg: MarsConfig, signals, arrays, n_tiles: int = 16,
                     cache_slots: int = 4, chunk: int = 8):
     """(tiered_call, resident_call, tiered_mapper): the SAME read stream
@@ -636,4 +727,5 @@ def run(n_reads: int = 32, ref_events: int = 20_000, junk_frac: float = 0.5,
                                                     < n_reads))
     rec["cache"] = bench_cache(cfg, signals, arrays, repeats=repeats)
     rec["fused"] = bench_fused(cfg, sig_pallas, arrays, repeats=repeats)
+    rec["fairness"] = bench_fairness(cfg, signals, arrays)
     return rec

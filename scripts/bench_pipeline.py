@@ -10,10 +10,10 @@ to BENCH_pipeline.json at the repo root (the per-PR perf trajectory file).
     scripts/bench_pipeline.py --check     # quick measurement, compared to
                                           # the committed baseline: exits 1
                                           # if the chaining, cheap, serving,
-                                          # tiered-cache OR fused-kernel
-                                          # phase time regressed > 20%
-                                          # (skips cleanly when no baseline
-                                          # exists)
+                                          # tiered-cache, fused-kernel OR
+                                          # multi-tenant fairness phase
+                                          # regressed > 20% (skips cleanly
+                                          # when no baseline exists)
     scripts/bench_pipeline.py --compiled  # opt-in: re-measure the quick
                                           # profile in compiled (non-
                                           # interpret) kernel mode and store
@@ -66,12 +66,13 @@ PROFILES = {
     "full": dict(n_reads=32, ref_events=20_000, junk_frac=0.5, repeats=7),
 }
 
-GATE_PHASES = ("chain", "cheap", "serving", "cache", "fused")
+GATE_PHASES = ("chain", "cheap", "serving", "cache", "fused", "fairness")
 CHECK_BACKEND = "reference"     # backend whose gate ratios are gated
 CHECK_REPEATS = 25
 # the fused gate times interpret-mode pallas kernels (slow), so it runs
-# fewer interleaved rounds than the jnp-only phases
-PHASE_ROUNDS = {"fused": 9}
+# fewer interleaved rounds than the jnp-only phases; the fairness gate is
+# a deterministic virtual-clock count ratio — one round is exact
+PHASE_ROUNDS = {"fused": 9, "fairness": 1}
 # the fused gate is pallas-vs-pallas by construction (fused mega-kernel
 # against the per-stage pallas program); the others gate CHECK_BACKEND
 PHASE_BACKEND = {"fused": "pallas"}
@@ -116,6 +117,13 @@ def measure(profiles, **kw):
               f"fused_gate={fused['fused_speedup']:.2f}x "
               f"({fused['fused_n_reads']} reads, {fused['fused_mode']} mode)",
               flush=True)
+        fair = out[name]["fairness"]
+        print(f"[bench_pipeline] {name}: fairness acme victims "
+              f"legacy={fair['fairness_acme_victims_legacy']} "
+              f"budgeted={fair['fairness_acme_victims_fair']} "
+              f"isolation={fair['fairness_speedup']:.1f}x "
+              f"(flood sheds={fair['fairness_flood_shed_fair']})",
+              flush=True)
         cache = out[name]["cache"]
         print(f"[bench_pipeline] {name}: cache_resident="
               f"{cache['cache_resident']*1e3:.2f}ms "
@@ -147,10 +155,11 @@ def write(path: pathlib.Path, measured) -> None:
 
 def measure_gate():
     """The interleaved pre/fast ratios on the quick workload — one record
-    per gated phase (chain, cheap, serving, cache, fused), all machine-
-    speed independent (see microbench.bench_chain_ratio /
+    per gated phase (chain, cheap, serving, cache, fused, fairness), all
+    machine-speed independent (see microbench.bench_chain_ratio /
     bench_cheap_ratio / bench_serving_ratio / bench_cache_ratio /
-    bench_fused_ratio)."""
+    bench_fused_ratio; bench_fairness_ratio is a deterministic
+    virtual-clock count ratio rather than a timing)."""
     from benchmarks import microbench
     params = PROFILES["quick"]
     print(f"[bench_pipeline] measuring interleaved {'/'.join(GATE_PHASES)} "
@@ -161,7 +170,8 @@ def measure_gate():
                cheap=microbench.bench_cheap_ratio,
                serving=microbench.bench_serving_ratio,
                cache=microbench.bench_cache_ratio,
-               fused=microbench.bench_fused_ratio)
+               fused=microbench.bench_fused_ratio,
+               fairness=microbench.bench_fairness_ratio)
     gates = {}
     for phase in GATE_PHASES:
         backend = PHASE_BACKEND.get(phase, CHECK_BACKEND)
@@ -174,9 +184,9 @@ def measure_gate():
 
 
 def check(path: pathlib.Path) -> int:
-    """Regression gate on the chaining, cheap, serving, tiered-cache AND
-    fused-kernel phases, machine-speed independent: compares the median
-    interleaved pre/fast
+    """Regression gate on the chaining, cheap, serving, tiered-cache,
+    fused-kernel AND multi-tenant fairness phases, machine-speed
+    independent: compares the median interleaved pre/fast
     speedup ratio of each phase against the baseline's identically-measured
     ``<phase>_gate`` record.  A rise in any phase's normalized time beyond
     ``gate_tol()`` (default 20%; BENCH_GATE_PCT overrides) fails; a phase

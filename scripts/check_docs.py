@@ -1,0 +1,149 @@
+#!/usr/bin/env python
+"""Docs honesty check: every path the docs cite must exist.
+
+Scans the front-door docs (README.md, ROADMAP.md, docs/*.md) for
+
+  * markdown links ``[text](target)`` — the target (external URLs and
+    pure #anchors excluded) must resolve relative to the repo root;
+  * path-like tokens in inline code spans and fenced code blocks — a
+    token that contains a ``/`` or ends in a source/doc suffix must name
+    an existing file or directory (repo-root relative; bare file names
+    like ``stages.py`` may live anywhere in the tree).
+
+Two resolution idioms beyond repo-root-relative are honoured, because
+the docs use them throughout: ``core/...`` / ``kernels/...`` style
+cites are ``src/repro``-relative, and ``core/index.TieredIndex`` style
+cites name an attribute of a module whose ``.py`` file must exist.
+
+Tokens that are clearly not paths are skipped: CLI flags (leading
+``-``), absolute paths (not claims about this tree), dotted python
+identifiers (``pipeline.map_chunk``), prose alternations whose first
+segment is no known directory (``Stage/Backend``), anything with
+characters outside ``[A-Za-z0-9_.@/-]`` (shell operators, tuple
+syntax, ``query:ring`` backend names, ...).
+
+Exit 0 when every reference resolves; otherwise print one line per
+broken reference and exit 1.  CI runs this so README / ARCHITECTURE /
+COUNTERS can never drift from the tree they describe; locally it is
+also exercised by tests/test_docs.py.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+DOC_FILES = ["README.md", "ROADMAP.md"]
+
+# a token with one of these suffixes is a path claim even without a "/"
+PATH_SUFFIXES = (".py", ".md", ".sh", ".json", ".txt", ".yml", ".yaml",
+                 ".ini", ".toml", ".jsonl")
+
+LINK_RE = re.compile(r"\[[^\]^]*\]\(([^)\s]+)\)")
+CODE_SPAN_RE = re.compile(r"`([^`]+)`")
+TOKEN_CHARS_RE = re.compile(r"[A-Za-z0-9_.@/\-]+")
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", ".venv", "node_modules"}
+
+
+def tree_names() -> set:
+    """Every file and directory basename in the repo (for bare-name cites)."""
+    names = set()
+    for dirpath, dirnames, filenames in os.walk(ROOT):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        names.update(dirnames)
+        names.update(filenames)
+    return names
+
+
+def known_first_segments() -> set:
+    """Directory names a path cite may start with: the repo's top-level
+    dirs plus src/repro's (for the ``core/...`` shorthand)."""
+    segs = {p.name for p in ROOT.iterdir() if p.is_dir()}
+    repro = ROOT / "src" / "repro"
+    if repro.is_dir():
+        segs |= {p.name for p in repro.iterdir() if p.is_dir()}
+    return segs - SKIP_DIRS
+
+
+def path_like(token: str, first_segs: set) -> bool:
+    if token.startswith(("-", "/", "~")):
+        return False              # CLI flag / absolute path (not a tree claim)
+    if not TOKEN_CHARS_RE.fullmatch(token):
+        return False              # shell syntax, tuples, colons, ...
+    if "/" in token.rstrip("/"):
+        # a slash token is a path claim only when it starts in a known
+        # directory — "Stage/Backend" prose alternations are not
+        return token.split("/", 1)[0] in first_segs
+    return token.endswith(PATH_SUFFIXES)
+
+
+def resolves(token: str, names: set) -> bool:
+    rel = token.rstrip("/")
+    for base in (ROOT, ROOT / "src" / "repro"):
+        if (base / rel).exists():
+            return True
+        # module-attribute cite: core/index.TieredIndex -> core/index.py
+        stem = rel.rsplit(".", 1)[0]
+        if stem != rel and (base / (stem + ".py")).exists():
+            return True
+    # bare file/dir name (no directory part): may live anywhere in the tree
+    return "/" not in rel and rel in names
+
+
+def candidate_tokens(line: str, in_fence: bool, first_segs: set):
+    """Path-claim candidates on one line: fenced lines wholesale, inline
+    code spans otherwise, plus markdown link targets."""
+    spans = [line] if in_fence else CODE_SPAN_RE.findall(line)
+    for span in spans:
+        for raw in span.split():
+            tok = raw.strip("`\"'()[]{},;:").rstrip(".")
+            if tok and path_like(tok, first_segs):
+                yield tok
+    for target in LINK_RE.findall(line):
+        if "://" in target or target.startswith(("mailto:", "#")):
+            continue
+        tok = target.split("#", 1)[0]
+        if tok:
+            yield tok
+
+
+def check_file(path: Path, names: set, first_segs: set) -> list:
+    failures = []
+    in_fence = False
+    for lineno, line in enumerate(
+            path.read_text(encoding="utf-8").splitlines(), 1):
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        for tok in candidate_tokens(line, in_fence, first_segs):
+            if not resolves(tok, names):
+                failures.append((path.relative_to(ROOT), lineno, tok))
+    return failures
+
+
+def main(argv=None) -> int:
+    docs = [ROOT / f for f in DOC_FILES]
+    docs += sorted((ROOT / "docs").glob("*.md"))
+    docs = [d for d in docs if d.exists()]
+    names = tree_names()
+    first_segs = known_first_segments()
+    failures = []
+    for doc in docs:
+        failures.extend(check_file(doc, names, first_segs))
+    for rel, lineno, tok in failures:
+        print(f"check_docs: {rel}:{lineno}: cited path does not exist: "
+              f"{tok!r}", file=sys.stderr)
+    n_docs = len(docs)
+    if failures:
+        print(f"check_docs: {len(failures)} broken reference(s) across "
+              f"{n_docs} doc(s)", file=sys.stderr)
+        return 1
+    print(f"check_docs: OK ({n_docs} docs, every cited path resolves)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,7 +4,7 @@
 #   scripts/run_tier1.sh            # fast pass (skips @slow property sweeps)
 #   scripts/run_tier1.sh --all      # everything, including @slow
 #   scripts/run_tier1.sh --bench    # fast pass + chain/cheap/serving/cache/
-#                                   # fused phase perf gates: runs scripts/bench_pipeline.py
+#                                   # fused/fairness phase gates: runs scripts/bench_pipeline.py
 #                                   # --check (quick profile) and fails on a
 #                                   # >20% regression of any gated phase vs the
 #                                   # committed BENCH_pipeline.json (skips

@@ -9,6 +9,7 @@ Public API:
     driver                unified streaming host driver + ProgressLog
     ServeDriver           continuous-batching multi-stream serving driver
     SLOClass              serving class (priority/deadline/shed contract)
+    TenantBudget          per-tenant fair-share shed budget (token bucket)
     FaultPlan             seeded storage-fault injection harness
     repartition_index     online drive-loss rebalancing (N -> N/2 fold)
     score_accuracy        P/R/F1 vs. ground truth
@@ -16,7 +17,7 @@ Public API:
 """
 from repro.core import costmodel, driver, stages
 from repro.core.server import (ClassReport, ServeDriver, SLOClass,
-                               StreamReport)
+                               StreamReport, TenantBudget, TenantReport)
 from repro.core.config import (DEFAULT, MODE_MS_FIXED, MODE_MS_FLOAT,
                                MODE_RH2, MODES, MarsConfig)
 from repro.core.faults import (FaultPlan, InjectedPrefetchError,
@@ -34,6 +35,7 @@ __all__ = [
     "MapOutput", "Mapper", "map_chunk", "map_chunk_sharded", "map_read",
     "costmodel", "driver", "stages", "score_accuracy", "ServeDriver",
     "StreamReport",
-    "SLOClass", "ClassReport", "FaultPlan", "TileReadError",
+    "SLOClass", "ClassReport", "TenantBudget", "TenantReport",
+    "FaultPlan", "TileReadError",
     "InjectedPrefetchError", "sample_fault_plans",
 ]

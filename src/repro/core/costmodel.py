@@ -48,6 +48,35 @@ def _delay_tripped(queue_delays: Sequence[float], chunk_cost: float,
     return mean > delay_limit * max(chunk_cost, 1e-12)
 
 
+def skew_factors(traffic: Sequence[float], replicas: int = 0,
+                 copies: int = 2) -> tuple:
+    """Query-lane load-imbalance factors from a per-tile probe histogram
+    (``HotTileCache.tile_traffic()``).
+
+    Tiles stripe 1:1 over query lanes, so the hottest tile sets the pace:
+    ``factor = n_tiles * max_i p_i`` where ``p_i`` is tile i's probe
+    share — 1.0 for uniform traffic, ``n_tiles`` when every probe lands
+    on one tile.  Replicating the top-``replicas`` tiles (same
+    traffic-then-tile-id order as ``HotTileCache._refresh_replicas``)
+    serves each from ``copies`` lanes, dividing its load.  Returns
+    ``(factor, factor_replicated)``, both floored at the uniform 1.0.
+    """
+    if replicas < 0:
+        raise ValueError(f"replicas must be >= 0; got {replicas}")
+    if copies < 1:
+        raise ValueError(f"copies must be >= 1; got {copies}")
+    t = [max(0.0, float(x)) for x in traffic]
+    total = sum(t)
+    n = len(t)
+    if n == 0 or total <= 0:
+        return 1.0, 1.0
+    top = set(sorted(range(n), key=lambda i: (-t[i], i))[:int(replicas)])
+    factor = max(1.0, n * max(t) / total)
+    eff = max(t[i] / (copies if i in top else 1) for i in range(n))
+    factor_repl = max(1.0, n * eff / total)
+    return factor, factor_repl
+
+
 class CostModel:
     """The Workload->cost protocol both backends implement."""
 
@@ -110,6 +139,20 @@ class CostModel:
                     energy_dynamic=e - ssd_model.SSD_ACTIVE_W * lat["total"],
                     stages=lat)
 
+    # ---- skewed traffic + hot-tile replication ----------------------- #
+    def skewed_serving(self, w: Workload, traffic: Sequence[float],
+                       replicas: int = 0, copies: int = 2,
+                       ssd: ssd_model.SSDConfig = ssd_model.SSDConfig()
+                       ) -> Dict:
+        """Price hot-bucket skew and the replication win: stretch the
+        query stage by the load-imbalance ``skew_factors`` of ``traffic``
+        (a per-tile probe histogram, e.g. ``HotTileCache.tile_traffic()``)
+        and re-price the batch with the top-``replicas`` tiles served
+        from ``copies`` lanes.  Returns the factors, the skewed and
+        replicated totals, and ``replication_speedup`` (>= 1; exactly 1
+        on uniform traffic, where both totals equal ``latency(w)``)."""
+        raise NotImplementedError
+
     # ---- the shed controller's overload signal ----------------------- #
     def shed_signal(self, chunk: int, chunk_cost: float, offered_load: float,
                     queue_delays: Sequence[float] = (),
@@ -150,6 +193,26 @@ class AnalyticModel(CostModel):
     def dram_sensitivity(self, w, sizes=(2 << 30, 4 << 30, 8 << 30),
                          ssd=ssd_model.SSDConfig()):
         return ssd_model.dram_size_sensitivity(w, sizes, ssd)
+
+    def skewed_serving(self, w, traffic, replicas=0, copies=2,
+                       ssd=ssd_model.SSDConfig()):
+        f, fr = skew_factors(traffic, replicas, copies)
+        st = ssd_model.mars_stage_times(w, ssd)
+        compute = (st["event_detection"] + st["seeding"] + st["filters"] +
+                   st["sorting"] + st["chaining_dp"] + st["dram_move"])
+        q = st["seeding_query"]
+
+        def law(c):
+            # the Section 6.3 overlap law of mars_latency
+            return max(st["flash"], c) + 0.02 * min(st["flash"], c)
+
+        total = law(compute + q * (f - 1.0))
+        total_repl = law(compute + q * (fr - 1.0))
+        return dict(factor=f, factor_replicated=fr, total=total,
+                    total_replicated=total_repl, query=q * f,
+                    query_replicated=q * fr,
+                    replication_speedup=total / total_repl,
+                    n_tiles=len(traffic), replicas=int(replicas))
 
     def shed_signal(self, chunk, chunk_cost, offered_load, queue_delays=(),
                     delay_limit=SHED_DELAY_LIMIT):
@@ -217,6 +280,21 @@ class SimModel(CostModel):
         from repro.core.sim import ssdsim
         return ssdsim.simulate_dram_sensitivity(w, sizes, ssd,
                                                 n_stripes=self.n_stripes)
+
+    def skewed_serving(self, w, traffic, replicas=0, copies=2,
+                       ssd=ssd_model.SSDConfig()):
+        from repro.core.sim import ssdsim
+        f, fr = skew_factors(traffic, replicas, copies)
+        skewed = ssdsim.simulate_batch(w, ssd, n_stripes=self.n_stripes,
+                                       query_scale=f)
+        repl = ssdsim.simulate_batch(w, ssd, n_stripes=self.n_stripes,
+                                     query_scale=fr)
+        return dict(factor=f, factor_replicated=fr, total=skewed["total"],
+                    total_replicated=repl["total"],
+                    query=skewed["seeding_query"],
+                    query_replicated=repl["seeding_query"],
+                    replication_speedup=skewed["total"] / repl["total"],
+                    n_tiles=len(traffic), replicas=int(replicas))
 
     def shed_signal(self, chunk, chunk_cost, offered_load, queue_delays=(),
                     delay_limit=SHED_DELAY_LIMIT):

@@ -310,6 +310,11 @@ def map_chunk(signals: jnp.ndarray, index: Dict[str, jnp.ndarray],
     from the registry: every stage's Pallas backend when ``use_kernels``,
     reference backends when not.  ``n_valid`` (traced; defaults to R) masks
     trailing pad rows out of counters and the ``mapped`` flags.
+
+    Contract: plan choice is result-invisible — every plan produces
+    bit-identical per-read outputs and the returned ``counters`` dict
+    carries exactly ``stages.CHUNK_COUNTER_SCHEMA`` (docs/COUNTERS.md),
+    so cost models and benchmarks can compare backends on one schema.
     """
     if plan is None:
         plan = stages.resolve_plan(
@@ -471,7 +476,9 @@ class Mapper:
     ``core/faults.FaultPlan`` injection harness to the cache's page-in
     path; ``cache_retries`` / ``cache_backoff`` bound the checksummed
     retry loop (core/tiered.py).  A plan injecting nothing is
-    byte-identical to no plan at all.
+    byte-identical to no plan at all.  ``cache_replicas=K`` pins the K
+    hottest tiles (by cumulative seed traffic) into extra replica slots
+    — result-invisible, skewed-traffic residency (HotTileCache docs).
     """
 
     def __init__(self, index: Index, cfg: Optional[MarsConfig] = None,
@@ -479,7 +486,8 @@ class Mapper:
                  mesh=None, tiles: int = 8, cache_slots: int = 4,
                  cache_policy: str = "lru", cache_seed: int = 0,
                  fault_plan=None, cache_retries: int = 3,
-                 cache_backoff: float = 1.0, reuse_prepass: bool = True):
+                 cache_backoff: float = 1.0, reuse_prepass: bool = True,
+                 cache_replicas: int = 0):
         self.index = index
         self.cfg = cfg or index.cfg
         self.backend = backend or (
@@ -504,7 +512,8 @@ class Mapper:
                                       faults=fault_plan,
                                       max_retries=cache_retries,
                                       backoff_base=cache_backoff,
-                                      reuse_prepass=reuse_prepass)
+                                      reuse_prepass=reuse_prepass,
+                                      replicas=cache_replicas)
             self.arrays = None
         elif stages.plan_index_kind(self.plan) == "partitioned":
             from repro.core.index import INDEX_AXIS, partition_index

@@ -67,6 +67,19 @@ first so slots free as early as possible.  ``SLOClass`` tags reads with
 per-class priority / relative-deadline defaults and a shed exemption;
 ``class_report()`` aggregates latency percentiles per class.
 
+Fairness (multi-tenant): streams are bound to *tenants*
+(``submit(..., tenant=...)``) and ``TenantBudget`` gives each tenant a
+fair-share token bucket over the virtual clock.  Budgets never
+hard-reject — every read is admitted if a slot exists — but the shed
+loop and the full-queue eviction pick OUT-OF-BUDGET reads first, so a
+flooding tenant's overflow is charged to the flooder (its own newest
+reads shed at their own admission) and a within-budget tenant's
+admitted set, results and latency trace are untouched by a co-tenant's
+flood (tests/test_tenants.py asserts the isolation exactly).
+``tenant_report()`` is the audit trail: per-tenant sheds, over-budget
+admissions and latency percentiles.  With no budgets configured the
+driver is bit-identical to the tenant-free one.
+
 Trace: the driver records a replayable chunk-event trace on its virtual
 clock (``self.events``): ``("arrival", t, stream, n)`` at submission,
 ``("dispatch", t, ci, stage, n_valid, stage_frac)`` when a chunk is
@@ -106,6 +119,34 @@ class SLOClass:
                              f"budget; got {self.deadline}")
 
 
+@dataclasses.dataclass(frozen=True)
+class TenantBudget:
+    """Per-tenant fair-share admission budget: a token bucket over the
+    serving driver's VIRTUAL clock.  ``rate`` is the tenant's fair share
+    (reads per virtual-time unit refilled into the bucket); ``burst`` is
+    the bucket capacity (defaults to ``rate * shed_window`` at driver
+    construction, floored at 1 token).  Every admitted read charges one
+    token; a read arriving on an empty bucket is still ADMITTED but
+    stamped out-of-budget — the budget never hard-rejects on its own, it
+    only steers who the closed-loop shed / full-queue eviction picks
+    first.  That makes budgets observation-only until overload: with
+    ``shed=False`` and a non-full queue, tenant accounting changes no
+    behavior at all."""
+    name: str
+    rate: float
+    burst: Optional[float] = None
+
+    def __post_init__(self):
+        if not self.name:
+            raise ValueError("tenant budget needs a non-empty tenant name")
+        if self.rate < 0:
+            raise ValueError(f"tenant budget rate must be >= 0 reads per "
+                             f"virtual-time unit; got {self.rate}")
+        if self.burst is not None and self.burst <= 0:
+            raise ValueError(f"tenant budget burst must be > 0 tokens; "
+                             f"got {self.burst}")
+
+
 @dataclasses.dataclass
 class _Slot:
     """One admitted read waiting for (or climbing) the stage ladder."""
@@ -119,6 +160,8 @@ class _Slot:
     stage: int = 0            # current prefix-ladder stage
     slo: Optional[str] = None # SLO class name (None = untagged)
     sheddable: bool = True
+    tenant: Optional[str] = None  # owning tenant (None = untenanted)
+    in_budget: bool = True    # bucket had a token at admission
 
     def rank(self) -> Tuple:
         """Scheduling rank: smaller is served first."""
@@ -146,6 +189,7 @@ class StreamState:
     n_done: int = 0
     n_shed: int = 0           # closed-loop shed (subset of n_rejected)
     n_nonfinite: int = 0      # NaN/Inf rows refused at admission (ditto)
+    tenant: Optional[str] = None  # owning tenant (bound at first submit)
 
     def _new_read(self) -> int:
         self.t_start.append(0)
@@ -182,6 +226,24 @@ class ClassReport:
     n_mapped: int
     n_rejected: int
     n_shed: int
+    p50_latency: float
+    p99_latency: float
+    mean_latency: float
+
+
+@dataclasses.dataclass
+class TenantReport:
+    """Per-tenant serving summary, aggregated across the tenant's streams
+    (``name=None`` collects untenanted streams).  ``n_shed`` counts
+    closed-loop sheds charged to the tenant; ``n_over_budget`` counts
+    admissions that found the tenant's token bucket empty (a leading
+    indicator of who is flooding, whether or not shedding is on)."""
+    name: Optional[str]
+    n_reads: int
+    n_mapped: int
+    n_rejected: int
+    n_shed: int
+    n_over_budget: int
     p50_latency: float
     p99_latency: float
     mean_latency: float
@@ -236,6 +298,18 @@ class ServeDriver:
                   signal also fires when the recent mean per-read queue
                   delay at dispatch exceeds this many ``chunk_cost``
                   units (catching capacity loss offered load misses).
+    tenant_budgets: ``TenantBudget`` fair-share definitions.  Streams are
+                  bound to a tenant at ``submit(..., tenant=...)``; every
+                  admitted read charges one token from its tenant's
+                  bucket (refilled at ``rate`` over the virtual clock, up
+                  to ``burst``).  Budgets never hard-reject: they steer
+                  victim selection — the closed-loop shed and the
+                  full-queue eviction pick OUT-OF-BUDGET reads first, so
+                  a flooding tenant's overflow is charged to the flooder
+                  and a within-budget tenant's traffic is isolated.  With
+                  no budgets configured (the default) tenant tags are
+                  observation-only and the driver is bit-identical to the
+                  tenant-free one.
     """
 
     def __init__(self, mapper, chunk: int = 64, max_queue: int = 4096,
@@ -246,7 +320,8 @@ class ServeDriver:
                  slo_classes: Optional[Sequence[SLOClass]] = None,
                  shed: bool = False, shed_window: float = 8.0,
                  cost_model="analytic",
-                 shed_delay_limit: float = costmodel.SHED_DELAY_LIMIT):
+                 shed_delay_limit: float = costmodel.SHED_DELAY_LIMIT,
+                 tenant_budgets: Optional[Sequence[TenantBudget]] = None):
         self.mapper = mapper
         self.cfg = mapper.cfg
         self.chunk = int(chunk)
@@ -267,6 +342,21 @@ class ServeDriver:
             raise ValueError(f"shed_delay_limit must be > 0 chunk services; "
                              f"got {shed_delay_limit}")
         self.shed_delay_limit = float(shed_delay_limit)
+        self.tenant_budgets: Dict[str, TenantBudget] = {
+            b.name: b for b in (tenant_budgets or ())}
+        # bucket capacity: explicit burst, else one shed_window's worth of
+        # the tenant's fair-share rate (>= 1 token so a within-rate tenant
+        # can always admit)
+        self._tenant_burst: Dict[str, float] = {
+            name: (b.burst if b.burst is not None
+                   else max(1.0, b.rate * self.shed_window))
+            for name, b in self.tenant_budgets.items()}
+        # name -> [tokens, last refill virtual time]; buckets start full
+        self._tenant_tokens: Dict[str, List[float]] = {
+            name: [self._tenant_burst[name], 0.0]
+            for name in self.tenant_budgets}
+        self._shed_by_tenant: Dict[Optional[str], int] = {}
+        self._over_budget: Dict[Optional[str], int] = {}
         # virtual time the tiered storage path loses to page-in
         # retry/backoff is folded into the serving clock as it accrues
         # (zero on the happy path -> parity intact)
@@ -322,11 +412,44 @@ class ServeDriver:
     def stream(self, stream_id: str) -> StreamState:
         return self._streams.setdefault(stream_id, StreamState())
 
+    def _bucket_refill(self, tenant: str, t: float) -> List[float]:
+        """Refill a tenant's token bucket up to virtual time ``t``."""
+        b = self.tenant_budgets[tenant]
+        s = self._tenant_tokens[tenant]
+        s[0] = min(self._tenant_burst[tenant],
+                   s[0] + b.rate * max(0.0, t - s[1]))
+        s[1] = max(s[1], t)
+        return s
+
+    def _charge_tenant(self, tenant: Optional[str], t: float) -> bool:
+        """Charge one admission token.  True = the read is in budget.
+        Tenants without a configured budget (and untenanted reads) are
+        always in budget — the legacy behavior."""
+        if tenant is None or tenant not in self.tenant_budgets:
+            return True
+        s = self._bucket_refill(tenant, t)
+        if s[0] >= 1.0:
+            s[0] -= 1.0
+            return True
+        self._over_budget[tenant] = self._over_budget.get(tenant, 0) + 1
+        return False
+
+    def _tenant_over(self, tenant: Optional[str]) -> bool:
+        """Live (no-charge) check: is the tenant's bucket empty NOW?"""
+        if tenant is None or tenant not in self.tenant_budgets:
+            return False
+        return self._bucket_refill(tenant, self.clock)[0] < 1.0
+
+    def tenant_tokens(self, tenant: str) -> float:
+        """The tenant's remaining budget tokens at the current clock."""
+        return self._bucket_refill(tenant, self.clock)[0]
+
     def submit(self, stream_id: str, signals: np.ndarray,
                priority: Optional[int] = None,
                deadline: Optional[float] = None,
                t: Optional[float] = None,
-               slo: Optional[str] = None) -> int:
+               slo: Optional[str] = None,
+               tenant: Optional[str] = None) -> int:
         """Admit a batch of reads for ``stream_id``.  Returns the number
         admitted; the rest were rejected (or evicted a worse read whose
         stream records the rejection).  ``t`` stamps the virtual arrival
@@ -335,10 +458,16 @@ class ServeDriver:
         ``slo`` names a registered ``SLOClass`` supplying priority /
         deadline defaults (its deadline is a RELATIVE budget from ``t``)
         and the shed exemption; explicit ``priority`` / ``deadline``
-        override the class.  Rows containing NaN/Inf are refused at
-        admission (counted per stream as ``n_nonfinite``, recorded as
-        rejected) — they would otherwise poison every chunk-mate's
-        counters inside ``map_chunk``."""
+        override the class.  ``tenant`` binds the stream to a tenant (a
+        stream keeps its first-bound tenant; re-binding to a different
+        one is an error) and, when a ``TenantBudget`` is configured for
+        it, charges one token per read from the tenant's bucket —
+        out-of-budget reads are still admitted but are first in line for
+        the closed-loop shed and the full-queue eviction (fair-share
+        isolation; see ``tenant_budgets`` in the class docstring).  Rows
+        containing NaN/Inf are refused at admission (counted per stream
+        as ``n_nonfinite``, recorded as rejected) — they would otherwise
+        poison every chunk-mate's counters inside ``map_chunk``."""
         signals = np.asarray(signals, np.float32)
         if signals.ndim == 1:
             signals = signals[None]
@@ -359,6 +488,13 @@ class ServeDriver:
         dl = float(deadline) if deadline is not None else (
             t + cls.deadline if cls else math.inf)
         st = self.stream(stream_id)
+        if tenant is not None:
+            if st.tenant is not None and st.tenant != tenant:
+                raise ValueError(
+                    f"stream {stream_id!r} already belongs to tenant "
+                    f"{st.tenant!r}; cannot re-bind it to {tenant!r}")
+            st.tenant = tenant
+        tenant = st.tenant
         finite = np.isfinite(signals).all(axis=1)
         admitted = 0
         for row, ok in zip(signals, finite):
@@ -373,7 +509,9 @@ class ServeDriver:
             self._admit_times.append(t)
             slot = _Slot(stream=stream_id, idx=idx, signal=row, t_arrive=t,
                          priority=prio, deadline=dl, seq=self._seq, slo=slo,
-                         sheddable=cls.sheddable if cls else True)
+                         sheddable=cls.sheddable if cls else True,
+                         tenant=tenant,
+                         in_budget=self._charge_tenant(tenant, self.clock))
             self._seq += 1
             if self._admit(slot):
                 admitted += 1
@@ -408,14 +546,25 @@ class ServeDriver:
 
     def _admit(self, slot: _Slot) -> bool:
         if self.shed and self._saturated():
-            # shed the least-worthy sheddable read: lowest priority, then
-            # latest deadline, then newest — the new read itself when it
-            # is the least worthy
+            # shed the least-worthy sheddable read: OUT-OF-BUDGET tenants
+            # first (the fair-share rule — with no budgets configured
+            # every read is in budget and the key degenerates to the
+            # legacy shed_rank), then lowest priority, then latest
+            # deadline, then newest — the new read itself when it is the
+            # least worthy.  SLO shed exemption always wins: an
+            # unsheddable read is never a candidate, budget or not.
             cands = [s for s in self._queue if s.sheddable]
             if slot.sheddable:
                 cands.append(slot)
+            if not slot.in_budget:
+                # an over-budget arrival may only displace its own
+                # tenant's traffic: the overload it causes is charged to
+                # it, never to a within-budget co-tenant (if the tenant
+                # has nothing sheddable queued, nothing is shed)
+                cands = [s for s in cands if s.tenant == slot.tenant]
             if cands:
-                victim = min(cands, key=_Slot.shed_rank)
+                victim = min(cands, key=lambda s: (s.in_budget,
+                                                   s.shed_rank()))
                 if victim is slot:
                     self._shed(slot)
                     return False
@@ -424,6 +573,20 @@ class ServeDriver:
         if self._outstanding() < self.max_queue:
             self._queue.append(slot)
             return True
+        if self.tenant_budgets and slot.in_budget:
+            # full queue, in-budget arrival: a tenant over its fair share
+            # RIGHT NOW cannot hold slots against a within-budget tenant
+            # — evict the least-worthy such read (charged as a shed to
+            # its own tenant), never an unsheddable one
+            over = [s for s in self._queue if s.sheddable
+                    and (not s.in_budget or self._tenant_over(s.tenant))]
+            if over:
+                victim = min(over, key=lambda s: (s.in_budget,
+                                                  s.shed_rank()))
+                self._queue.remove(victim)
+                self._shed(victim)
+                self._queue.append(slot)
+                return True
         if self._queue:
             worst = max(self._queue, key=lambda s: s.rank())
             if slot.rank() < worst.rank():
@@ -439,6 +602,8 @@ class ServeDriver:
         self._streams[slot.stream].n_shed += 1
         self._shed_by_class[slot.slo] = \
             self._shed_by_class.get(slot.slo, 0) + 1
+        self._shed_by_tenant[slot.tenant] = \
+            self._shed_by_tenant.get(slot.tenant, 0) + 1
         self._reject(slot)
 
     def _reject(self, slot: _Slot) -> None:
@@ -452,10 +617,10 @@ class ServeDriver:
     # ------------------------------------------------------------------ #
     def _admit_due(self) -> None:
         while self._arrivals and self._arrivals[0][0] <= self.clock:
-            t, stream_id, signals, priority, deadline, slo = \
+            t, stream_id, signals, priority, deadline, slo, tenant = \
                 self._arrivals.popleft()
             self.submit(stream_id, signals, priority=priority,
-                        deadline=deadline, t=t, slo=slo)
+                        deadline=deadline, t=t, slo=slo, tenant=tenant)
 
     def _next_chunk(self) -> Optional[driver.Chunk]:
         self._admit_due()
@@ -597,20 +762,24 @@ class ServeDriver:
         """Run an arrival trace to completion.
 
         ``trace`` rows are ``(t, stream_id, signals[, priority[,
-        deadline[, slo]]])`` in virtual-time units; rows need not be
-        sorted.  ``priority`` / ``deadline`` may be None to take the SLO
-        class defaults.  Returns the per-stream reports (``report()``)."""
+        deadline[, slo[, tenant]]]])`` in virtual-time units; rows need
+        not be sorted.  ``priority`` / ``deadline`` may be None to take
+        the SLO class defaults; ``tenant`` binds the stream's tenant
+        (see ``submit``).  Returns the per-stream reports
+        (``report()``)."""
         rows = []
         for row in trace:
             t, stream_id, signals = row[0], row[1], row[2]
             priority = row[3] if len(row) > 3 else None
             deadline = row[4] if len(row) > 4 else None
             slo = row[5] if len(row) > 5 else None
+            tenant = row[6] if len(row) > 6 else None
             rows.append((float(t), str(stream_id),
                          np.asarray(signals, np.float32),
                          None if priority is None else int(priority),
                          None if deadline is None else float(deadline),
-                         None if slo is None else str(slo)))
+                         None if slo is None else str(slo),
+                         None if tenant is None else str(tenant)))
         rows.sort(key=lambda r: r[0])
         self._arrivals.extend(rows)
         self.drain()
@@ -678,6 +847,41 @@ class ServeDriver:
                 name=name, n_reads=b["n_reads"], n_mapped=b["n_mapped"],
                 n_rejected=b["n_rejected"],
                 n_shed=self._shed_by_class.get(name, 0),
+                p50_latency=float(np.percentile(lat, 50)) if lat.size else math.nan,
+                p99_latency=float(np.percentile(lat, 99)) if lat.size else math.nan,
+                mean_latency=float(lat.mean()) if lat.size else math.nan)
+        return out
+
+    def tenant_report(self) -> Dict[Optional[str], TenantReport]:
+        """Per-tenant fair-share accounting aggregated across each
+        tenant's streams.  Keyed by tenant name (None = streams submitted
+        without a tenant).  The shed and over-budget columns are the
+        fairness audit trail: under a one-tenant flood with budgets
+        configured, every shed lands in the flooder's row."""
+        acc: Dict[Optional[str], Dict] = {}
+
+        def bucket(name):
+            return acc.setdefault(name, dict(n_reads=0, n_mapped=0,
+                                             n_rejected=0, lat=[]))
+        for st in self._streams.values():
+            b = bucket(st.tenant)
+            b["n_reads"] += len(st.latency)
+            b["n_mapped"] += int(sum(st.mapped))
+            b["n_rejected"] += st.n_rejected
+            b["lat"].extend(l for l, a in zip(st.latency, st.admitted)
+                            if a and math.isfinite(l))
+        for name in self._shed_by_tenant:
+            bucket(name)
+        for name in self._over_budget:
+            bucket(name)
+        out = {}
+        for name, b in acc.items():
+            lat = np.asarray(b["lat"], np.float64)
+            out[name] = TenantReport(
+                name=name, n_reads=b["n_reads"], n_mapped=b["n_mapped"],
+                n_rejected=b["n_rejected"],
+                n_shed=self._shed_by_tenant.get(name, 0),
+                n_over_budget=self._over_budget.get(name, 0),
                 p50_latency=float(np.percentile(lat, 50)) if lat.size else math.nan,
                 p99_latency=float(np.percentile(lat, 99)) if lat.size else math.nan,
                 mean_latency=float(lat.mean()) if lat.size else math.nan)

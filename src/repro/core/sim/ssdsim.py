@@ -45,8 +45,16 @@ N_STRIPES = 50
 
 def simulate_batch(w: Workload, ssd: ssd_model.SSDConfig = ssd_model.SSDConfig(),
                    n_stripes: int = N_STRIPES,
-                   buffer_depth: int = 2) -> Dict[str, object]:
+                   buffer_depth: int = 2,
+                   query_scale: float = 1.0) -> Dict[str, object]:
     """Event-driven batch latency of ``w`` on one MARS SSD.
+
+    ``query_scale`` stretches the pLUTo query-unit stage by a load-
+    imbalance factor (>= 1 under hot-bucket skew, back toward 1 with
+    replication — see ``costmodel.skew_factors``): the query units serve
+    buckets bank-by-bank, so probes concentrating on few buckets serialize
+    on the hot bank while the rest idle.  The default 1.0 is bit-exact
+    with the unscaled simulator.
 
     Returns the ``mars_latency`` keys (total / compute / flash / per-stage
     times) plus ``components`` (per-component busy/idle/queue-delay
@@ -57,7 +65,13 @@ def simulate_batch(w: Workload, ssd: ssd_model.SSDConfig = ssd_model.SSDConfig()
         raise ValueError(f"n_stripes must be >= 1; got {n_stripes}")
     if buffer_depth < 1:
         raise ValueError(f"buffer_depth must be >= 1; got {buffer_depth}")
-    st = ssd_model.mars_stage_times(w, ssd)
+    if query_scale <= 0:
+        raise ValueError(f"query_scale must be > 0; got {query_scale}")
+    st = dict(ssd_model.mars_stage_times(w, ssd))
+    # q - old == 0.0 exactly at scale 1.0, keeping the default bit-exact
+    q = st["seeding_query"] * query_scale
+    st["seeding"] = st["seeding"] + (q - st["seeding_query"])
+    st["seeding_query"] = q
     P = int(n_stripes)
 
     sim = engine.Simulator()

@@ -99,7 +99,10 @@ _loaded_backend_modules = set()
 
 # Uniform counter schema: every map_chunk output carries exactly these
 # per-chunk counters (plus n_reads / n_samples added by the chunk program).
-# workload.from_counters / ssd_model consume them by name.
+# workload.from_counters / ssd_model consume them by name.  The full
+# contract — which counters are closed-form, the debug-counters-never-
+# change-the-chunk-schema rule, and the consumer table — is
+# docs/COUNTERS.md.
 COUNTER_SCHEMA: Tuple[str, ...] = (
     "n_events", "n_seeds", "n_bucket_probes", "n_hits_raw",
     "n_hits_postfreq", "n_hits_exact", "n_votes_cast",
@@ -113,7 +116,7 @@ CHUNK_COUNTER_SCHEMA: Tuple[str, ...] = COUNTER_SCHEMA + (
 # program DROPS them from MapOutput.counters so CHUNK_COUNTER_SCHEMA —
 # and every consumer keyed on it (workload, ssd_model, psum specs) —
 # stays exactly as-is; read them by running the stage (or cheap_phase)
-# directly.
+# directly.  See docs/COUNTERS.md for the full contract.
 DEBUG_COUNTER_SCHEMA: Tuple[str, ...] = (
     "n_votes_clipped",
     # tiered-index hot-tile cache traffic (core/tiered.py): per-chunk tile
@@ -172,6 +175,18 @@ _REGISTRY: Dict[Tuple[str, str], Backend] = {}
 def register_backend(stage: str, name: str, fn,
                      supports=None, replace: bool = False,
                      primitive=None, index_kind: str = "replicated") -> None:
+    """Register ``fn`` as backend ``name`` for ``stage``.
+
+    ``fn(state, cfg, index) -> state`` must be bit-exact to the stage's
+    reference backend — same state keys, same values, and the exact
+    COUNTER_SCHEMA counter increments (extra diagnostics are allowed only
+    as DEBUG_COUNTER_SCHEMA keys, which the chunk program drops; see
+    docs/COUNTERS.md).  ``supports(cfg)`` gates eligibility (unsupported
+    configs fall back to reference in resolve_plan); ``primitive``
+    optionally exposes a batch-level entry point the cheap phase can fuse;
+    ``index_kind`` declares the index layout the backend consumes
+    (replicated / partitioned / tiered).
+    """
     if stage not in STAGE_ORDER:
         raise ValueError(f"unknown stage {stage!r}; stages: {STAGE_ORDER}")
     if index_kind not in ("replicated", "partitioned", "tiered"):

@@ -216,6 +216,17 @@ class HotTileCache:
     bounded); the persistent slots are untouched and misses are charged
     for the non-resident tiles — the cache-of-1 thrash regime.
 
+    replicas: K extra slots pinned to the top-K hottest tiles by the
+    cumulative traffic histogram (``tile_traffic()``) — the MegIS-style
+    skewed-workload optimization: hot-bucket tiles absorbing most probes
+    stay resident no matter how cold traffic churns the primary slots.
+    Replicas are loaded through the same CRC-verified path, hold
+    byte-identical tile planes, win the tile->slot routing, and are
+    never eviction victims; results are bit-identical to ``replicas=0``
+    for every cache size × K (tests/test_tiered.py).  Replica paging is
+    accounted separately (``replica_loads`` / ``replica_bytes``) so
+    hit/miss telemetry still describes the primary working set.
+
     Telemetry (cumulative, host ints): ``hits`` / ``misses`` (tile
     touches found/not found resident), ``paged_bytes`` (host->device bytes
     for missed tiles), ``retries`` (page-in re-reads), ``corruptions``
@@ -237,7 +248,7 @@ class HotTileCache:
                  policy: str = "lru", seed: int = 0,
                  faults: Optional[faults_mod.FaultPlan] = None,
                  max_retries: int = 3, backoff_base: float = 1.0,
-                 reuse_prepass: bool = True):
+                 reuse_prepass: bool = True, replicas: int = 0):
         if n_slots < 1:
             raise ValueError(f"need at least one cache slot; got {n_slots}")
         if policy not in ("lru", "random"):
@@ -248,6 +259,9 @@ class HotTileCache:
         if backoff_base < 0:
             raise ValueError(f"backoff_base must be >= 0; "
                              f"got {backoff_base}")
+        if replicas < 0:
+            raise ValueError(f"replicas must be >= 0 extra hot-tile slots; "
+                             f"got {replicas}")
         self.max_retries = int(max_retries)
         self.backoff_base = float(backoff_base)
         self._inj = (faults_mod.FaultInjector(faults)
@@ -267,14 +281,25 @@ class HotTileCache:
         if mesh is not None:
             from repro.distributed.sharding import mapping_chunk_shardings
             _, self._rep = mapping_chunk_shardings(mesh)
+        # Replica slots sit AFTER the n_slots primary slots: each holds a
+        # byte-identical copy of one of the top-K hottest tiles (by the
+        # cumulative traffic histogram), is never an eviction victim, and
+        # wins the tile->slot routing over the tile's primary copy.  All
+        # view gathers therefore read the same words either way —
+        # replication is result-invisible by construction; what it buys is
+        # residency: a hot tile stays servable while cold traffic churns
+        # the primary slots.
+        self.n_replicas = min(int(replicas), tiered.n_tiles)
+        self.n_total = self.n_slots + self.n_replicas
         blp1 = tiered.buckets_per_tile + 1
-        self._slot_tile = np.full(self.n_slots, -1, np.int64)
-        self._slot_last = np.zeros(self.n_slots, np.int64)   # chunk serial
-        self._slot_touch = np.zeros(self.n_slots, np.int64)  # seed traffic
+        self._slot_tile = np.full(self.n_total, -1, np.int64)
+        self._slot_last = np.zeros(self.n_total, np.int64)   # chunk serial
+        self._slot_touch = np.zeros(self.n_total, np.int64)  # seed traffic
+        self._tile_traffic = np.zeros(tiered.n_tiles, np.int64)
         self._serial = 0
-        self._dev_bstart = self._put(jnp.zeros((self.n_slots, blp1),
+        self._dev_bstart = self._put(jnp.zeros((self.n_total, blp1),
                                                jnp.int32))
-        self._dev_ent = self._put(jnp.zeros((2, self.n_slots, tiered.emax),
+        self._dev_ent = self._put(jnp.zeros((2, self.n_total, tiered.emax),
                                             jnp.int32))
         self._ready: Dict[int, Dict] = {}    # id(signals) -> prepared view
         self._keep: Dict[int, object] = {}   # keeps ids unique until popped
@@ -292,6 +317,8 @@ class HotTileCache:
         self.retries = 0          # page-in re-reads (failures + mismatches)
         self.corruptions = 0      # checksum mismatches caught at page-in
         self.vtime_penalty = 0.0  # virtual time lost to spikes + backoff
+        self.replica_loads = 0    # hot-tile copies paged into replica slots
+        self.replica_bytes = 0    # host->device bytes those copies cost
         self._chunk_retries = 0
         self._chunk_corruptions = 0
 
@@ -301,7 +328,13 @@ class HotTileCache:
 
     @property
     def cache_nbytes(self) -> int:
-        return self.n_slots * self.tiered.tile_nbytes
+        return self.n_total * self.tiered.tile_nbytes
+
+    def tile_traffic(self) -> np.ndarray:
+        """Cumulative per-tile seed-traffic histogram (a copy) — the
+        replication policy's input, and the skew statistic the cost
+        model's ``skewed_serving`` term consumes."""
+        return self._tile_traffic.copy()
 
     # ---------------------------------------------------------- prefetch
     def prefetch(self, signals, cfg: MarsConfig, plan: stages.Plan) -> None:
@@ -380,6 +413,29 @@ class HotTileCache:
             f"tile {t} page-in failed after {self.max_retries + 1} "
             f"attempts: {last}") from last
 
+    def _refresh_replicas(self) -> None:
+        """Keep the replica slots holding the current top-K hottest tiles
+        (highest cumulative traffic, ties to the lower tile id).  Loads go
+        through the same CRC-verified ``_fetch_tile`` path, so a replica's
+        planes are byte-identical to the host tile — routing through a
+        replica slot gathers exactly the words the primary would."""
+        if not self.n_replicas:
+            return
+        traffic = self._tile_traffic
+        hot = np.nonzero(traffic > 0)[0]
+        hot = hot[np.lexsort((hot, -traffic[hot]))][:self.n_replicas]
+        for j, t in enumerate(hot):
+            s = self.n_slots + j
+            if self._slot_tile[s] == int(t):
+                continue
+            bstart, ent = self._fetch_tile(int(t))
+            self._dev_bstart = self._dev_bstart.at[s].set(jnp.asarray(bstart))
+            self._dev_ent = self._dev_ent.at[:, s, :].set(jnp.asarray(ent))
+            self._slot_tile[s] = int(t)
+            self._slot_touch[s] = 0
+            self.replica_loads += 1
+            self.replica_bytes += self.tiered.tile_nbytes
+
     def _prepare(self, signals, cfg, plan):
         ti = self.tiered
         hist_d, keys, valid, n_ev = _prepass_fn(cfg, plan, ti.n_tiles)(
@@ -390,6 +446,8 @@ class HotTileCache:
         self.n_chunks += 1
         self._chunk_retries = 0
         self._chunk_corruptions = 0
+        self._tile_traffic += hist
+        self._refresh_replicas()
         if needed.size <= self.n_slots:
             view = self._ensure_resident(needed, hist)
         else:
@@ -413,8 +471,10 @@ class HotTileCache:
         return view
 
     def _victim(self, needed: set) -> int:
-        """A slot whose tile is not needed this chunk; empty slots first,
-        then least-recently-used / least-trafficked (or random)."""
+        """A PRIMARY slot whose tile is not needed this chunk; empty slots
+        first, then least-recently-used / least-trafficked (or random).
+        Replica slots are never victims — that is the replication win:
+        hot tiles stay resident while cold traffic churns the primaries."""
         cands = [s for s in range(self.n_slots)
                  if self._slot_tile[s] not in needed]
         empties = [s for s in cands if self._slot_tile[s] < 0]

@@ -34,30 +34,50 @@ import time
 import numpy as np
 
 from repro.core import (FaultPlan, MarsConfig, Mapper, ServeDriver, SLOClass,
-                        build_index, costmodel, ssd_model, workload)
+                        TenantBudget, build_index, costmodel, ssd_model,
+                        workload)
 from repro.signal import datasets, simulate
 
 
 def build_trace(signals: np.ndarray, n_streams: int, reads_per_stream: int,
                 arrival_rate: float, seed: int = 0,
-                priorities=(0,), slos=None) -> list:
+                priorities=(0,), slos=None, tenants: int = 0,
+                skew: float = 0.0) -> list:
     """A Poisson arrival trace over ``n_streams`` streams: each stream
     submits ``reads_per_stream`` single-read requests; inter-arrival
     times are exponential with the given aggregate rate (virtual-time
     units = chunk services).  With ``slos`` each stream is tagged with
     the SLO class name ``slos[stream % len(slos)]`` (priority/deadline
-    come from the class)."""
+    come from the class).
+
+    ``tenants`` > 0 assigns stream k to tenant ``t{k % tenants}`` (rows
+    grow the tenant column ``ServeDriver.serve_trace`` binds on).
+    ``skew`` > 0 draws each read's owning stream from a Zipf-like
+    distribution (stream k weighted ``(k+1)**-skew``) instead of the
+    balanced split, so low-numbered streams — and their tenants — hog
+    the trace; 0 keeps the legacy balanced trace bit-exactly."""
     rng = np.random.default_rng(seed)
     n = n_streams * reads_per_stream
     gaps = rng.exponential(1.0 / max(arrival_rate, 1e-9), n)
     times = np.cumsum(gaps)
-    owners = rng.permutation(np.repeat(np.arange(n_streams),
-                                       reads_per_stream))
+    if skew > 0:
+        p = (1.0 + np.arange(n_streams)) ** -float(skew)
+        owners = rng.choice(n_streams, size=n, p=p / p.sum())
+    else:
+        owners = rng.permutation(np.repeat(np.arange(n_streams),
+                                           reads_per_stream))
     trace = []
     for k in range(n):
         sid = f"s{owners[k]}"
         sig = signals[k % signals.shape[0]]
-        if slos is None:
+        tenant = f"t{int(owners[k]) % tenants}" if tenants else None
+        if tenants:
+            prio = (None if slos is not None
+                    else int(priorities[owners[k] % len(priorities)]))
+            slo = None if slos is None else slos[int(owners[k]) % len(slos)]
+            trace.append((float(times[k]), sid, sig, prio, None, slo,
+                          tenant))
+        elif slos is None:
             trace.append((float(times[k]), sid, sig,
                           int(priorities[owners[k] % len(priorities)])))
         else:
@@ -113,6 +133,20 @@ def main(argv=None):
                     help="host-resident index tiles (with --fault-plan)")
     ap.add_argument("--cache-slots", type=int, default=4,
                     help="device tile-cache slots (with --fault-plan)")
+    ap.add_argument("--cache-replicas", type=int, default=0,
+                    help="pinned replica slots for the hottest tiles "
+                         "(with --fault-plan): traffic-driven, result-"
+                         "invisible; the [model] line prices the win")
+    ap.add_argument("--tenants", type=int, default=0, metavar="N",
+                    help="assign streams round-robin to N tenants with "
+                         "fair-share shed budgets (capacity/N reads per "
+                         "virtual unit each) and print the per-tenant "
+                         "report; 0 = tenant-free legacy driver")
+    ap.add_argument("--skew", type=float, default=0.0, metavar="ALPHA",
+                    help="Zipf exponent skewing trace volume toward low-"
+                         "numbered streams/tenants (0 = balanced); with "
+                         "--tenants the hot tenant overruns its budget "
+                         "and is shed first")
     ap.add_argument("--shed", action="store_true",
                     help="closed-loop admission: SLO classes (gold / "
                          "best_effort) + saturation-aware load shedding")
@@ -141,7 +175,8 @@ def main(argv=None):
         plan = FaultPlan(seed=args.fault_plan, p_read_error=0.02,
                          p_corrupt=0.02, p_latency=0.05, latency_units=2.0)
         return Mapper(index, cfg, backend="tiered", tiles=args.tiles,
-                      cache_slots=args.cache_slots, fault_plan=plan)
+                      cache_slots=args.cache_slots,
+                      cache_replicas=args.cache_replicas, fault_plan=plan)
 
     slos = None
     serve_kw = dict(chunk=args.chunk, max_queue=args.max_queue,
@@ -150,6 +185,11 @@ def main(argv=None):
         serve_kw.update(shed=True, shed_window=args.shed_window,
                         slo_classes=SHED_CLASSES)
         slos = [c.name for c in SHED_CLASSES]
+    if args.tenants:
+        # fair share of service capacity (`chunk` reads per virtual unit)
+        serve_kw.update(tenant_budgets=tuple(
+            TenantBudget(f"t{i}", rate=args.chunk / args.tenants)
+            for i in range(args.tenants)))
 
     def run_once(load, verbose=True):
         # offered load in reads per virtual time unit: one unit serves one
@@ -157,7 +197,7 @@ def main(argv=None):
         mapper = make_mapper()
         trace = build_trace(rs.signals, args.streams, args.reads_per_stream,
                             arrival_rate=load * args.chunk, seed=args.seed,
-                            slos=slos)
+                            slos=slos, tenants=args.tenants, skew=args.skew)
         sd = ServeDriver(mapper, **serve_kw)
         t0 = time.time()
         reports = sd.serve_trace(trace)
@@ -181,6 +221,16 @@ def main(argv=None):
                     print(f"  [class {name}] reads={c.n_reads} "
                           f"mapped={c.n_mapped} shed={c.n_shed} "
                           f"p50={c.p50_latency:.2f} p99={c.p99_latency:.2f}")
+            if args.tenants:
+                for name, r in sorted(sd.tenant_report().items(),
+                                      key=lambda kv: str(kv[0])):
+                    tokens = (sd.tenant_tokens(name)
+                              if name in sd.tenant_budgets else math.nan)
+                    print(f"  [tenant {name}] reads={r.n_reads} "
+                          f"mapped={r.n_mapped} shed={r.n_shed} "
+                          f"over_budget={r.n_over_budget} "
+                          f"p50={r.p50_latency:.2f} p99={r.p99_latency:.2f} "
+                          f"tokens_left={tokens:.1f}")
             if mapper.cache is not None:
                 c = mapper.cache
                 print(f"[storage] tiles paged={c.misses} retries={c.retries} "
@@ -225,6 +275,16 @@ def main(argv=None):
               f"service={sv['service']*1e6:.1f}us/read rho={sv['utilization']:.2f} "
               f"p50={sv['p50']*1e6:.1f}us p99={sv['p99']*1e6:.1f}us"
               + (" SATURATED" if sv["saturated"] else ""))
+        cache = sd.mapper.cache
+        if cache is not None:
+            # price the measured tile-traffic skew + the replication win
+            sk = cm.skewed_serving(w, cache.tile_traffic(),
+                                   replicas=cache.n_replicas)
+            print(f"[skew] tile-traffic imbalance x{sk['factor']:.2f}; "
+                  f"{cache.n_replicas} replica(s) -> "
+                  f"x{sk['factor_replicated']:.2f}; modeled replication "
+                  f"speedup {sk['replication_speedup']:.2f}x "
+                  f"(replica loads={cache.replica_loads})")
     return reports
 
 

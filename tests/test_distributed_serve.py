@@ -115,3 +115,78 @@ def test_served_streams_match_single_device():
                        text=True, env=env, cwd=REPO, timeout=560)
     assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
     assert "ok" in r.stdout
+
+
+# --------------------------------------------------------------------------- #
+# Tenant fairness + hot-tile replication on the sharded mesh
+# --------------------------------------------------------------------------- #
+FAIR_SCRIPT = """
+import numpy as np
+from repro.core import MarsConfig, Mapper, ServeDriver, build_index
+from repro.core.server import TenantBudget
+from repro.launch.mesh import make_mesh
+from repro.signal import simulate
+
+mesh = make_mesh((2, 2), ("data", "model"))
+cfg = MarsConfig(hash_bits=14).with_mode("ms_fixed")
+ref = simulate.make_reference(50_000, seed=3)
+reads = simulate.sample_reads(ref, 16, signal_len=cfg.signal_len, seed=4,
+                              junk_frac=0.25)
+idx = build_index(ref.events_concat, ref.n_events, cfg)
+CHUNK = 8
+BUDGETS = (TenantBudget("acme", rate=10.0),
+           TenantBudget("flood", rate=0.0, burst=1.0))
+
+def drive(mapper, flood_n):
+    sd = ServeDriver(mapper, chunk=CHUNK, shed=True, shed_window=2.0,
+                     cost_model="sim", tenant_budgets=BUDGETS)
+    sd.submit("a0", reads.signals[:6], tenant="acme", t=0.0)
+    sd.submit("a1", reads.signals[6:12], tenant="acme", t=0.0)
+    if flood_n:
+        sd.submit("f0", np.repeat(reads.signals[12:13], flood_n, axis=0),
+                  tenant="flood", t=0.0)
+    sd.drain()
+    return sd
+
+for backend in ("reference", "a2a", "tiered"):
+    mapper = Mapper(idx, cfg, backend=backend, mesh=mesh)
+    solo = drive(mapper, 0)
+    both = drive(Mapper(idx, cfg, backend=backend, mesh=mesh), 40)
+    tr = both.tenant_report()
+    assert tr["acme"].n_shed == 0 and tr["acme"].n_rejected == 0, backend
+    assert tr["flood"].n_shed == both.n_shed > 0, backend
+    for sid in ("a0", "a1"):
+        a, b = solo.results(sid), both.results(sid)
+        np.testing.assert_array_equal(a.t_start, b.t_start)
+        np.testing.assert_array_equal(a.score, b.score)
+        np.testing.assert_array_equal(a.mapped, b.mapped)
+        assert all(both.stream(sid).admitted), (backend, sid)
+
+# hot-tile replication under shard_map: bit-identical to the resident
+# single-device path for several (cache size, K) points
+solo_out = Mapper(idx, cfg).map_signals(reads.signals, chunk=CHUNK)
+for slots, K in ((1, 2), (2, 3), (4, 8)):
+    m = Mapper(idx, cfg, backend="tiered", mesh=mesh, tiles=16,
+               cache_slots=slots, cache_replicas=K)
+    out = m.map_signals(reads.signals, chunk=CHUNK)
+    np.testing.assert_array_equal(np.asarray(out.t_start),
+                                  np.asarray(solo_out.t_start))
+    np.testing.assert_array_equal(np.asarray(out.score),
+                                  np.asarray(solo_out.score))
+    np.testing.assert_array_equal(np.asarray(out.mapped),
+                                  np.asarray(solo_out.mapped))
+    assert {k: int(v) for k, v in out.counters.items()} == \\
+        {k: int(v) for k, v in solo_out.counters.items()}, (slots, K)
+print("ok")
+"""
+
+
+def test_tenant_fairness_and_replication_sharded():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = str(REPO / "src")
+    r = subprocess.run([sys.executable, "-c", FAIR_SCRIPT],
+                       capture_output=True, text=True, env=env, cwd=REPO,
+                       timeout=560)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "ok" in r.stdout

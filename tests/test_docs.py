@@ -1,0 +1,83 @@
+"""Doc/CLI drift guards.
+
+The documentation layer (README.md, docs/, ROADMAP.md) cites paths,
+scripts and serve_rsga flags by name.  These tests pin the docs to the
+tree: scripts/check_docs.py must pass (every cited path resolves), its
+checker must actually reject broken cites, and every ``--flag`` the
+README's serving examples name must be a real serve_rsga argparse flag.
+"""
+import importlib.util
+import pathlib
+import re
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+CHECK_DOCS = ROOT / "scripts" / "check_docs.py"
+
+
+def _load_check_docs():
+    spec = importlib.util.spec_from_file_location("check_docs", CHECK_DOCS)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_check_docs_passes():
+    # the CI docs gate: every path README/ROADMAP/docs cite must exist
+    proc = subprocess.run([sys.executable, str(CHECK_DOCS)],
+                          capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stderr
+    assert "OK" in proc.stdout
+
+
+def test_check_docs_rejects_broken_cites():
+    # the checker is not a rubber stamp: a missing path fails, the
+    # shorthand/skip rules behave as documented
+    m = _load_check_docs()
+    names, segs = m.tree_names(), m.known_first_segments()
+    assert m.path_like("core/tiered.py", segs)
+    assert m.resolves("core/tiered.py", names)          # src/repro shorthand
+    assert m.resolves("core/index.TieredIndex", names)  # module-attr cite
+    assert not m.resolves("core/definitely_missing.py", names)
+    assert not m.resolves("scripts/no_such_script.py", names)
+    assert not m.path_like("Stage/Backend", segs)       # prose alternation
+    assert not m.path_like("--tenants", segs)           # CLI flag
+    assert not m.path_like("/root/somewhere", segs)     # absolute path
+
+
+def _readme_fenced_blocks():
+    text = (ROOT / "README.md").read_text(encoding="utf-8")
+    return re.findall(r"```sh\n(.*?)```", text, flags=re.S)
+
+
+def test_readme_quickstart_commands_exist():
+    blocks = _readme_fenced_blocks()
+    assert blocks, "README quickstart lost its fenced sh blocks"
+    cited = [tok for b in blocks for tok in b.split()
+             if tok.endswith((".py", ".sh", ".txt"))]
+    assert cited, "README quickstart cites no scripts"
+    for tok in cited:
+        assert (ROOT / tok).exists(), f"README cites missing {tok}"
+
+
+def test_readme_serving_flags_exist():
+    # every --flag in README blocks that invoke serve_rsga must be a
+    # real argparse option (catches flag renames breaking the docs)
+    flags = {tok.split("=", 1)[0]
+             for b in _readme_fenced_blocks() if "serve_rsga" in b
+             for tok in b.replace("\\", " ").split()
+             if tok.startswith("--")}
+    assert flags, "README lost its serve_rsga example"
+    from repro.launch import serve_rsga
+    import contextlib
+    import io
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf), pytest.raises(SystemExit) as e:
+        serve_rsga.main(["--help"])
+    assert e.value.code == 0
+    helptext = buf.getvalue()
+    for flag in sorted(flags):
+        assert flag in helptext, f"README names unknown serve_rsga flag {flag}"

@@ -273,3 +273,108 @@ def test_driver_sheds_on_measured_queue_delay(small_index, cfg_fixed,
     assert calm.n_shed == 0
     off = run(shed=False)
     assert off.n_shed == 0 and off.n_chunks == calm.n_chunks
+
+
+# --------------------------------------------------------------------------- #
+# Skewed traffic + hot-tile replication pricing
+# --------------------------------------------------------------------------- #
+def test_skew_factors_closed_form():
+    # uniform traffic: no imbalance, replication buys nothing
+    assert costmodel.skew_factors([5, 5, 5, 5]) == (1.0, 1.0)
+    assert costmodel.skew_factors([5, 5, 5, 5], replicas=2) == (1.0, 1.0)
+    # fully concentrated: factor = n_tiles; one replica halves it
+    f, fr = costmodel.skew_factors([0, 0, 80, 0, 0, 0, 0, 0], replicas=1)
+    assert f == 8.0 and fr == 4.0
+    # replicas=0 leaves the replicated factor equal to the skewed one
+    f, fr = costmodel.skew_factors([1, 9], replicas=0)
+    assert f == fr == 2 * 0.9
+    # replicating a cold tile cannot push the factor below uniform 1.0
+    f, fr = costmodel.skew_factors([1, 1], replicas=2)
+    assert f == 1.0 and fr == 1.0
+    # tie-break: highest traffic first, then lowest tile id — the same
+    # order HotTileCache._refresh_replicas pins replicas in
+    f, fr = costmodel.skew_factors([4, 4, 4, 0], replicas=1, copies=2)
+    assert fr == 4 * 4 / 12               # tile 0 halved; tiles 1,2 still hot
+    # degenerate inputs price as uniform
+    assert costmodel.skew_factors([]) == (1.0, 1.0)
+    assert costmodel.skew_factors([0, 0, 0]) == (1.0, 1.0)
+    with pytest.raises(ValueError, match="replicas"):
+        costmodel.skew_factors([1], replicas=-1)
+    with pytest.raises(ValueError, match="copies"):
+        costmodel.skew_factors([1], copies=0)
+
+
+def test_query_scale_default_is_bit_exact():
+    w = make_workload()
+    a = simulate_batch(w, n_stripes=4)
+    b = simulate_batch(w, n_stripes=4, query_scale=1.0)
+    assert a["event_log"] == b["event_log"]
+    assert a["total"] == b["total"]
+    with pytest.raises(ValueError, match="query_scale"):
+        simulate_batch(w, query_scale=0.0)
+
+
+@pytest.mark.parametrize("model", ["analytic", "sim"])
+def test_skewed_serving_uniform_equals_batch_latency(model):
+    """Degenerate identity: uniform traffic prices exactly like the plain
+    batch on BOTH backends, and replication reports speedup 1."""
+    w = make_workload()
+    m = costmodel.get_model(model)
+    out = m.skewed_serving(w, [7, 7, 7, 7], replicas=2)
+    assert out["factor"] == out["factor_replicated"] == 1.0
+    assert out["replication_speedup"] == 1.0
+    assert out["total"] == out["total_replicated"] == m.latency(w)["total"]
+
+
+@pytest.mark.parametrize("model", ["analytic", "sim"])
+def test_skewed_serving_prices_replication_win(model):
+    """Hot-bucket skew costs; replicating the hot tiles wins it back —
+    monotonically in K on both backends."""
+    w = make_workload()
+    m = costmodel.get_model(model)
+    traffic = [100, 80, 8, 8, 8, 8, 8, 8]        # two hot tiles + cold tail
+    base = m.latency(w)["total"]
+    totals = []
+    for k in (0, 1, 2):
+        out = m.skewed_serving(w, traffic, replicas=k)
+        assert out["total"] > base               # skew always costs
+        assert out["replication_speedup"] >= 1.0
+        totals.append(out["total_replicated"])
+        assert out["total"] == totals[0]         # K only moves the repl arm
+    assert totals[0] > totals[1] > totals[2]     # each replica helps here
+    assert m.skewed_serving(w, traffic, replicas=1)["replication_speedup"] > 1
+
+
+def test_skewed_serving_backends_agree():
+    """Calibration: the DES twin agrees with the closed form to <1% on the
+    default (no-contention) config, skewed or not."""
+    w = make_workload()
+    ana = costmodel.get_model("analytic")
+    sim = costmodel.get_model("sim")
+    for traffic, k in (([1, 1, 1, 1], 0), ([90, 5, 5, 0], 0),
+                       ([90, 5, 5, 0], 1), ([50, 30, 10, 10], 2)):
+        a = ana.skewed_serving(w, traffic, replicas=k)
+        s = sim.skewed_serving(w, traffic, replicas=k)
+        assert s["factor"] == a["factor"]
+        assert s["factor_replicated"] == a["factor_replicated"]
+        for key in ("total", "total_replicated"):
+            assert abs(s[key] - a[key]) / a[key] < 0.01, (traffic, k, key)
+
+
+def test_skewed_serving_consumes_cache_histogram(small_index, cfg_fixed,
+                                                 small_reads):
+    """End to end: HotTileCache.tile_traffic() is valid input — the
+    measured skew of a real tiered run prices on both backends."""
+    m = Mapper(small_index, cfg_fixed, backend="tiered", tiles=8,
+               cache_slots=2, cache_replicas=2)
+    m.map_signals(small_reads.signals, chunk=4)
+    traffic = m.cache.tile_traffic()
+    assert traffic.sum() > 0
+    w = make_workload(1_000)
+    for model in ("analytic", "sim"):
+        out = costmodel.get_model(model).skewed_serving(
+            w, traffic, replicas=m.cache.n_replicas)
+        assert out["n_tiles"] == 8 and out["replicas"] == 2
+        assert out["factor"] >= out["factor_replicated"] >= 1.0
+        assert math.isfinite(out["total"])
+        assert out["total"] >= out["total_replicated"]

@@ -1,0 +1,268 @@
+"""Multi-tenant fair serving: per-tenant shed budgets (ServeDriver).
+
+The fairness contract under test (core/server.py):
+
+  * budgets never hard-reject — they steer shed/eviction victim choice;
+  * budget-exhausted tenants shed FIRST, even when priority would have
+    picked someone else (the starvation case budgets exist to prevent);
+  * the SLO shed exemption beats budgets: an unsheddable read is never a
+    victim, in or out of budget;
+  * isolation: a within-budget tenant's admitted set, per-stream results
+    AND latency trace are unchanged by a co-tenant's flood — the flood's
+    out-of-budget overflow is shed at its own admission, as if it had
+    never been sent;
+  * no budgets configured => bit-identical to the tenant-free driver
+    (tenant tags are observation-only).
+
+Backends: single-device reference and out-of-core tiered here; the
+sharded mesh run rides tests/test_distributed_serve.py.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import MarsConfig, Mapper, build_index
+from repro.core.server import SLOClass, ServeDriver, TenantBudget
+from repro.signal import simulate
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = MarsConfig(hash_bits=12).with_mode("ms_fixed")
+    ref = simulate.make_reference(8_000, seed=5)
+    reads = simulate.sample_reads(ref, 24, signal_len=cfg.signal_len,
+                                  seed=6, junk_frac=0.25)
+    idx = build_index(ref.events_concat, ref.n_events, cfg)
+    return cfg, reads, idx
+
+
+def _mapper(setup, backend):
+    cfg, _, idx = setup
+    if backend == "tiered":
+        return Mapper(idx, cfg, backend="tiered", tiles=8, cache_slots=4)
+    return Mapper(idx, cfg)
+
+
+BUDGETS = (TenantBudget("acme", rate=10.0),
+           TenantBudget("flood", rate=0.0, burst=1.0))
+
+
+def _drive(mapper, flood_n, flood_sig, acme_sig, **kw):
+    """acme: two well-behaved streams (6 reads each, under capacity at
+    chunk=8 / shed_window=2); flood: one stream of ``flood_n`` identical
+    reads with an empty budget — the overload source."""
+    sd = ServeDriver(mapper, chunk=8, shed=True, shed_window=2.0,
+                     cost_model="sim", tenant_budgets=BUDGETS, **kw)
+    sd.submit("a0", acme_sig[:6], tenant="acme", t=0.0)
+    sd.submit("a1", acme_sig[6:12], tenant="acme", t=0.0)
+    if flood_n:
+        sd.submit("f0", np.repeat(flood_sig, flood_n, axis=0),
+                  tenant="flood", t=0.0)
+    sd.drain()
+    return sd
+
+
+# --------------------------------------------------------------------------- #
+# Isolation: the flood is invisible to the within-budget tenant
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", ["reference", "tiered"])
+def test_flood_sheds_charged_to_flooder(setup, backend):
+    _, reads, _ = setup
+    m = _mapper(setup, backend)
+    solo = _drive(m, 0, reads.signals[12:13], reads.signals)
+    both = _drive(_mapper(setup, backend), 40, reads.signals[12:13],
+                  reads.signals)
+    tr = both.tenant_report()
+    # every shed lands in the flooder's row; acme is untouched
+    assert tr["acme"].n_shed == 0 and tr["acme"].n_rejected == 0
+    assert tr["acme"].n_over_budget == 0
+    assert tr["flood"].n_shed > 0
+    assert tr["flood"].n_shed == both.n_shed
+    assert tr["flood"].n_over_budget > 0
+    # acme's per-stream results are bit-identical with or without the flood
+    for sid in ("a0", "a1"):
+        a, b = solo.results(sid), both.results(sid)
+        np.testing.assert_array_equal(a.t_start, b.t_start, err_msg=sid)
+        np.testing.assert_array_equal(a.score, b.score, err_msg=sid)
+        np.testing.assert_array_equal(a.mapped, b.mapped, err_msg=sid)
+        np.testing.assert_array_equal(a.n_events, b.n_events, err_msg=sid)
+        assert all(both.stream(sid).admitted)
+
+
+def test_flood_excess_is_as_if_never_sent(setup):
+    """The exact isolation statement: the full flood run equals the run
+    where the flooder only ever sent the reads that were admitted — same
+    acme results AND same acme latency trace, read for read.  (Every
+    out-of-budget shed hits the arriving read at its own admission, so
+    it never perturbs the queue.)"""
+    _, reads, _ = setup
+    full = _drive(_mapper(setup, "reference"), 40, reads.signals[12:13],
+                  reads.signals)
+    k = int(sum(full.stream("f0").admitted))
+    assert 0 < k < 40                        # some admitted, most shed
+    trunc = _drive(_mapper(setup, "reference"), k, reads.signals[12:13],
+                   reads.signals)
+    assert trunc.n_shed == 0
+    for sid in ("a0", "a1"):
+        got, want = full.stream(sid), trunc.stream(sid)
+        assert got.latency == want.latency, sid
+        np.testing.assert_array_equal(full.results(sid).t_start,
+                                      trunc.results(sid).t_start)
+
+
+def test_exhausted_tenant_shed_before_priority(setup):
+    """The starvation case: the flooder submits at HIGHER priority, which
+    the legacy shed rule serves first (shedding acme).  Budgets flip it:
+    out-of-budget beats priority, so the flooder's own overflow is shed
+    and acme survives untouched."""
+    _, reads, _ = setup
+
+    def run(budgets):
+        sd = ServeDriver(_mapper(setup, "reference"), chunk=8, shed=True,
+                         shed_window=2.0, cost_model="sim",
+                         tenant_budgets=budgets)
+        sd.submit("a0", reads.signals[:12], tenant="acme", t=0.0)
+        sd.submit("f0", np.repeat(reads.signals[12:13], 40, axis=0),
+                  tenant="flood", priority=1, t=0.0)
+        sd.drain()
+        return sd
+
+    legacy = run(None)
+    fair = run(BUDGETS)
+    assert legacy.stream("a0").n_shed > 0          # priority starves acme
+    assert fair.stream("a0").n_shed == 0           # budgets isolate acme
+    assert all(fair.stream("a0").admitted)
+    assert fair.tenant_report()["flood"].n_shed == fair.n_shed > 0
+
+
+def test_unsheddable_class_beats_budget(setup):
+    """The SLO shed exemption is absolute: a budget-exhausted tenant's
+    unsheddable reads are never shed — budgets only reorder victims among
+    the sheddable."""
+    _, reads, _ = setup
+    gold = SLOClass("gold", priority=1, sheddable=False)
+    sd = ServeDriver(_mapper(setup, "reference"), chunk=8, shed=True,
+                     shed_window=2.0, cost_model="sim",
+                     slo_classes=(gold,), tenant_budgets=BUDGETS)
+    sd.submit("a0", reads.signals[:12], tenant="acme", t=0.0)
+    sd.submit("g0", np.repeat(reads.signals[13:14], 8, axis=0),
+              tenant="flood", slo="gold", t=0.0)
+    sd.submit("f0", np.repeat(reads.signals[12:13], 32, axis=0),
+              tenant="flood", t=0.0)
+    sd.drain()
+    assert all(sd.stream("g0").admitted)           # exempt despite budget
+    assert sd.stream("g0").n_shed == 0
+    assert sd.stream("f0").n_shed > 0              # sheddable tail pays
+    assert sd.stream("a0").n_shed == 0
+
+
+# --------------------------------------------------------------------------- #
+# Full-queue eviction charges the over-budget tenant
+# --------------------------------------------------------------------------- #
+def test_eviction_prefers_over_budget_tenant(setup):
+    """With the queue full, an in-budget arrival evicts an over-budget
+    tenant's read at EQUAL rank (legacy eviction needs a strictly better
+    rank, so the flooder would otherwise squat the queue)."""
+    _, reads, _ = setup
+
+    def run(budgets):
+        sd = ServeDriver(_mapper(setup, "reference"), chunk=8, max_queue=4,
+                         tenant_budgets=budgets)
+        sd.submit("f0", np.repeat(reads.signals[12:13], 4, axis=0),
+                  tenant="flood", t=0.0)
+        n = sd.submit("a0", reads.signals[:2], tenant="acme", t=0.0)
+        sd.drain()
+        return sd, n
+
+    legacy, n_legacy = run(None)
+    fair, n_fair = run(BUDGETS)
+    assert n_legacy == 0                          # equal rank: squatted out
+    assert legacy.stream("a0").n_rejected == 2
+    assert n_fair == 2                            # budgets evict the squat
+    assert all(fair.stream("a0").admitted)
+    assert fair.tenant_report()["flood"].n_shed == 2
+    assert fair.tenant_report()["acme"].n_shed == 0
+
+
+# --------------------------------------------------------------------------- #
+# No budgets => today's driver; accounting plumbing
+# --------------------------------------------------------------------------- #
+def test_tenant_tags_alone_change_nothing(setup):
+    """With no budgets configured, tenant tags are observation-only: the
+    run is bit-identical (events, results, reports) to the untagged one."""
+    _, reads, _ = setup
+
+    def run(tag):
+        sd = ServeDriver(_mapper(setup, "reference"), chunk=8, shed=True,
+                         shed_window=2.0, cost_model="sim")
+        sd.submit("a0", reads.signals[:8],
+                  tenant="acme" if tag else None, t=0.0)
+        sd.submit("f0", reads.signals[8:24],
+                  tenant="flood" if tag else None, t=0.0)
+        sd.drain()
+        return sd
+
+    tagged, plain = run(True), run(False)
+    assert tagged.events == plain.events
+    assert tagged.counters == plain.counters
+    for sid in ("a0", "f0"):
+        np.testing.assert_array_equal(tagged.results(sid).t_start,
+                                      plain.results(sid).t_start)
+        assert tagged.stream(sid).n_shed == plain.stream(sid).n_shed
+    assert set(tagged.tenant_report()) == {"acme", "flood"}
+    assert set(plain.tenant_report()) == {None}
+
+
+def test_token_bucket_refills_over_virtual_clock(setup):
+    """The bucket refills at ``rate`` per virtual-time unit up to
+    ``burst`` — measured on the driver's own clock."""
+    _, reads, _ = setup
+    sd = ServeDriver(_mapper(setup, "reference"), chunk=8,
+                     tenant_budgets=(TenantBudget("t", rate=2.0,
+                                                  burst=4.0),))
+    assert sd.tenant_tokens("t") == 4.0            # starts full
+    sd.submit("s", reads.signals[:3], tenant="t", t=0.0)
+    assert sd.tenant_tokens("t") == 1.0
+    sd.submit("s", reads.signals[3:5], tenant="t", t=0.0)
+    assert sd.tenant_tokens("t") == 0.0            # 1 spent + 1 over
+    assert sd.tenant_report()["t"].n_over_budget == 1
+    sd.clock = 1.5                                 # refill 2.0/unit
+    assert sd.tenant_tokens("t") == 3.0
+    sd.clock = 10.0
+    assert sd.tenant_tokens("t") == 4.0            # capped at burst
+    sd.drain()
+
+
+def test_tenant_validation(setup):
+    _, reads, _ = setup
+    with pytest.raises(ValueError, match="name"):
+        TenantBudget("", rate=1.0)
+    with pytest.raises(ValueError, match="rate"):
+        TenantBudget("t", rate=-1.0)
+    with pytest.raises(ValueError, match="burst"):
+        TenantBudget("t", rate=1.0, burst=0.0)
+    sd = ServeDriver(_mapper(setup, "reference"), chunk=8)
+    sd.submit("s", reads.signals[:1], tenant="acme")
+    with pytest.raises(ValueError, match="re-bind"):
+        sd.submit("s", reads.signals[1:2], tenant="emca")
+    # rebinding to the SAME tenant (or omitting it) is fine
+    sd.submit("s", reads.signals[1:2], tenant="acme")
+    sd.submit("s", reads.signals[2:3])
+    sd.drain()
+    assert sd.tenant_report()["acme"].n_reads == 3
+
+
+def test_serve_trace_tenant_column(setup):
+    """serve_trace rows carry the tenant in column 6 and the report
+    aggregates latencies per tenant."""
+    _, reads, _ = setup
+    sd = ServeDriver(_mapper(setup, "reference"), chunk=8,
+                     tenant_budgets=BUDGETS)
+    trace = [(0.0, "a0", reads.signals[:4], None, None, None, "acme"),
+             (0.5, "f0", reads.signals[4:8], None, None, None, "flood")]
+    sd.serve_trace(trace)
+    tr = sd.tenant_report()
+    assert tr["acme"].n_reads == 4 and tr["flood"].n_reads == 4
+    assert math.isfinite(tr["acme"].p50_latency)
+    assert math.isfinite(tr["flood"].mean_latency)

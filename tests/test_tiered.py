@@ -287,3 +287,88 @@ def test_prepass_planes_in_view(setup):
                 reuse_prepass=False)
     bare = no.cache.prepare(sig, cfg, no.plan)
     assert not any(k in bare for k in PREPASS_KEYS)
+
+
+# --------------------------------------------------------------------------- #
+# Hot-tile replication (skewed traffic)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("cache_slots", [1, 2, 4, 16])
+@pytest.mark.parametrize("replicas", [0, 1, 2, 5, 16])
+def test_replication_parity_cache_x_k(setup, base_out, cache_slots,
+                                      replicas):
+    """Replication is result-invisible by construction: every (cache size,
+    replication K) combination — including K > n_tiles and the cache-of-1
+    thrash regime — is bit-identical to the resident path, outputs and
+    CHUNK_COUNTER_SCHEMA counters alike."""
+    cfg, _, reads, idx = setup
+    m = Mapper(idx, cfg, backend="tiered", tiles=16,
+               cache_slots=cache_slots, cache_replicas=replicas)
+    _assert_parity(base_out, m.map_signals(reads.signals, chunk=8))
+    if replicas:
+        assert m.cache.n_replicas == min(replicas, 16)
+        assert m.cache.replica_loads >= 1        # some tile got traffic
+        assert m.cache.replica_bytes == \
+            m.cache.replica_loads * m.cache.tiered.tile_nbytes
+
+
+@pytest.mark.parametrize("policy,seed", [("lru", 0), ("random", 1),
+                                         ("random", 2)])
+def test_replication_parity_eviction_order(setup, base_out, policy, seed):
+    """Replica routing composes with any eviction order of the primary
+    slots — still bit-exact."""
+    cfg, _, reads, idx = setup
+    m = Mapper(idx, cfg, backend="tiered", tiles=16, cache_slots=2,
+               cache_policy=policy, cache_seed=seed, cache_replicas=3)
+    _assert_parity(base_out, m.map_signals(reads.signals, chunk=8))
+
+
+def test_replication_shields_hot_tiles(setup, base_out):
+    """The functional win: with a thrashing primary cache, pinning the
+    hottest tiles into replica slots converts their misses into hits —
+    strictly better hit rate than the unreplicated cache, same results."""
+    cfg, _, reads, idx = setup
+    plain = Mapper(idx, cfg, backend="tiered", tiles=16, cache_slots=2)
+    repl = Mapper(idx, cfg, backend="tiered", tiles=16, cache_slots=2,
+                  cache_replicas=4)
+    _assert_parity(base_out, plain.map_signals(reads.signals, chunk=8))
+    _assert_parity(base_out, repl.map_signals(reads.signals, chunk=8))
+    assert repl.cache.hits > plain.cache.hits
+    assert repl.cache.misses < plain.cache.misses
+    # the replicated tiles are exactly the traffic top-K the histogram
+    # names (ties to the lower tile id)
+    traffic = repl.cache.tile_traffic()
+    hot = np.nonzero(traffic > 0)[0]
+    want = hot[np.lexsort((hot, -traffic[hot]))][:repl.cache.n_replicas]
+    got = repl.cache._slot_tile[repl.cache.n_slots:]
+    np.testing.assert_array_equal(np.sort(got[got >= 0]), np.sort(want))
+
+
+def test_replication_serve_parity(setup):
+    """ServeDriver over a replicated tiered mapper: per-stream results
+    equal mapping each stream alone (chunk mixing must not perturb the
+    replica set's result-invisibility)."""
+    cfg, _, reads, idx = setup
+    m = Mapper(idx, cfg, backend="tiered", tiles=16, cache_slots=2,
+               cache_replicas=3)
+    rng = np.random.default_rng(7)
+    owner = rng.integers(0, 3, 16)
+    order = rng.permutation(16)
+    sd = m.serve(chunk=8)
+    for r in order:
+        sd.submit(f"s{owner[r]}", reads.signals[int(r)])
+    sd.drain()
+    for k in range(3):
+        rows = [int(r) for r in order if owner[r] == k]
+        if not rows:
+            continue
+        want = m.map_signals(reads.signals[np.asarray(rows)], chunk=8)
+        got = sd.results(f"s{k}")
+        np.testing.assert_array_equal(got.t_start, np.asarray(want.t_start))
+        np.testing.assert_array_equal(got.score, np.asarray(want.score))
+        np.testing.assert_array_equal(got.mapped, np.asarray(want.mapped))
+
+
+def test_replication_validation(setup):
+    cfg, _, _, idx = setup
+    with pytest.raises(ValueError, match="replicas"):
+        Mapper(idx, cfg, backend="tiered", tiles=8, cache_replicas=-1)
